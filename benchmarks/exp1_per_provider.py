@@ -1,0 +1,50 @@
+"""Experiment 1: per-provider weak/strong scaling of OVH, TH, TPT (paper §5.1).
+
+Paper protocol: 4k/8k/16k noop tasks on 4/8/16 vCPUs per provider, MCPP and
+SCPP.  Claims validated:
+  * OVH dominated by #tasks/#pods, invariant across providers & vCPUs,
+  * SCPP OVH ~ +46% vs MCPP (per-pod serialization I/O),
+  * MCPP TH ~ +44% over SCPP,
+  * TPT >> OVH (platform overheads dominate the broker's).
+"""
+from __future__ import annotations
+
+from repro.core import Task
+
+from benchmarks.common import CLOUDS, cloud_provider, make_broker, print_rows, write_csv
+
+
+def run(n_tasks_list=(500, 1000, 2000), vcpus_list=(4, 8, 16), pod_store="disk",
+        providers=CLOUDS, tasks_per_pod=64, verbose=True) -> list[dict]:
+    rows = []
+    for provider in providers:
+        for vcpus in vcpus_list:
+            for n_tasks in n_tasks_list:
+                for model in ("mcpp", "scpp"):
+                    h = make_broker(pod_store=pod_store)
+                    h.register_provider(cloud_provider(provider, vcpus=vcpus))
+                    tasks = [Task(kind="noop") for _ in range(n_tasks)]
+                    sub = h.submit(tasks, partitioning=model, tasks_per_pod=tasks_per_pod)
+                    sub.wait(timeout=600)
+                    m = sub.metrics()
+                    rows.append({
+                        "exp": "exp1", "provider": provider, "vcpus": vcpus,
+                        "n_tasks": n_tasks, "model": model, "pod_store": pod_store,
+                        **m.row(),
+                    })
+                    h.shutdown(wait=False)
+    write_csv(f"exp1_per_provider_{pod_store}", rows)
+    if verbose:
+        print_rows(rows[-4:])
+    return rows
+
+
+def main(full: bool = False):
+    sizes = (4000, 8000, 16000) if full else (500, 1000, 2000)
+    return run(n_tasks_list=sizes)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(full="--full" in sys.argv)

@@ -1,0 +1,45 @@
+"""Experiment 2: cross-provider scalability (paper §5.2).
+
+One workload split concurrently across all four cloud providers.  Claims:
+  * aggregated OVH consistent with Exp 1 at the per-provider share,
+  * aggregated TH ~ 4x the single-provider TH,
+  * MCPP-vs-SCPP behaviour replicates Exp 1.
+"""
+from __future__ import annotations
+
+from repro.core import Task
+
+from benchmarks.common import CLOUDS, cloud_provider, make_broker, print_rows, write_csv
+
+
+def run(n_tasks_list=(2000, 4000, 8000), vcpus=16, pod_store="disk", verbose=True) -> list[dict]:
+    rows = []
+    for n_tasks in n_tasks_list:
+        for model in ("mcpp", "scpp"):
+            h = make_broker(pod_store=pod_store, policy="round_robin")
+            for c in CLOUDS:
+                h.register_provider(cloud_provider(c, vcpus=vcpus))
+            tasks = [Task(kind="noop") for _ in range(n_tasks)]
+            sub = h.submit(tasks, partitioning=model)
+            sub.wait(timeout=600)
+            m = sub.metrics()
+            rows.append({
+                "exp": "exp2", "providers": len(CLOUDS), "n_tasks": n_tasks,
+                "model": model, "pod_store": pod_store, **m.row(),
+            })
+            h.shutdown(wait=False)
+    write_csv(f"exp2_cross_provider_{pod_store}", rows)
+    if verbose:
+        print_rows(rows)
+    return rows
+
+
+def main(full: bool = False):
+    sizes = (16000, 32000, 64000) if full else (2000, 4000, 8000)
+    return run(n_tasks_list=sizes)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(full="--full" in sys.argv)

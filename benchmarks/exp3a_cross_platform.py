@@ -1,0 +1,44 @@
+"""Experiment 3A: cross-platform (cloud + HPC) scalability (paper §5.3).
+
+Homogeneous noop workload over 4 clouds + 1 HPC pilot, SCPP (the paper uses
+SCPP as tasks execute outside pods on HPC).  Claim: the HPC connector adds
+no overhead class beyond the cloud connectors (OVH/TH match Exp 2).
+"""
+from __future__ import annotations
+
+from repro.core import Task
+
+from benchmarks.common import CLOUDS, cloud_provider, hpc_provider, make_broker, print_rows, write_csv
+
+
+def run(n_tasks_list=(2500, 5000, 10000), vcpus=16, pod_store="disk", verbose=True) -> list[dict]:
+    rows = []
+    for n_tasks in n_tasks_list:
+        h = make_broker(pod_store=pod_store)
+        for c in CLOUDS:
+            h.register_provider(cloud_provider(c, vcpus=vcpus))
+        h.register_provider(hpc_provider(cores=vcpus))
+        tasks = [Task(kind="noop") for _ in range(n_tasks)]
+        sub = h.submit(tasks, partitioning="scpp")
+        sub.wait(timeout=600)
+        m = sub.metrics()
+        rows.append({
+            "exp": "exp3a", "providers": len(CLOUDS) + 1, "n_tasks": n_tasks,
+            "model": "scpp", "pod_store": pod_store, **m.row(),
+        })
+        h.shutdown(wait=False)
+    write_csv(f"exp3a_cross_platform_{pod_store}", rows)
+    if verbose:
+        print_rows(rows)
+    return rows
+
+
+def main(full: bool = False):
+    sizes = (20000, 40000, 80000) if full else (2500, 5000, 10000)
+    return run(n_tasks_list=sizes)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(full="--full" in sys.argv)

@@ -1,0 +1,80 @@
+"""Kernel micro-bench: interpret-mode correctness timing + XLA-path timing.
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower than compiled Mosaic); the number that matters for the
+repo's CI is the XLA-path (ref) timing and the allclose check.  Prints the
+``name,us_per_call,derived`` rows required by benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(full: bool = False):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    B, H, KV, L, hd = 1, 4, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(B, H, L, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, KV, L, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, KV, L, hd)), jnp.float32)
+    t_ref = _time(lambda q, k, v: ref.attention_ref(q, k, v, causal=True), q, k, v)
+    err = float(jnp.max(jnp.abs(
+        ops.flash_attention(q, k, v, causal=True) - ref.attention_ref(q, k, v, causal=True)
+    )))
+    rows.append(("flash_attention_ref_xla", t_ref, f"allclose_err={err:.2e}"))
+
+    B, ck, di, N = 2, 64, 256, 16
+    x = jnp.asarray(rng.normal(size=(B, ck, di)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, ck, di)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(B, ck, N)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(B, ck, N)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 2.0, (di, N)), jnp.float32)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    t_ref = _time(lambda *a_: ref.selective_scan_chunk_ref(*a_), x, dt, bm, cm, a, h0)
+    y1, h1 = ops.selective_scan_chunk(x, dt, bm, cm, a, h0, block_d=128)
+    y2, h2 = ref.selective_scan_chunk_ref(x, dt, bm, cm, a, h0)
+    err = float(jnp.max(jnp.abs(y1 - y2)))
+    rows.append(("selective_scan_ref_xla", t_ref, f"allclose_err={err:.2e}"))
+
+    B, L2, dr = 2, 128, 512
+    la = -jnp.asarray(rng.uniform(0.01, 1.0, (B, L2, dr)), jnp.float32)
+    gx = jnp.asarray(rng.normal(size=(B, L2, dr)), jnp.float32)
+    h0r = jnp.zeros((B, dr), jnp.float32)
+    t_ref = _time(lambda *a_: ref.rglru_ref(*a_), la, gx, h0r)
+    y1, _ = ops.rglru_scan(la, gx, h0r, block_d=256)
+    y2, _ = ref.rglru_ref(la, gx, h0r)
+    err = float(jnp.max(jnp.abs(y1 - y2)))
+    rows.append(("rglru_scan_ref_xla", t_ref, f"allclose_err={err:.2e}"))
+
+    E, C, D, F = 4, 128, 256, 512
+    x = jnp.asarray(rng.normal(size=(E, C, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(E, D, F)), jnp.float32)
+    t_ref = _time(lambda *a_: ref.moe_gmm_ref(*a_), x, w)
+    err = float(jnp.max(jnp.abs(
+        ops.moe_gmm(x, w, block_c=64, block_f=128, block_d=128) - ref.moe_gmm_ref(x, w)
+    )))
+    rows.append(("moe_gmm_ref_xla", t_ref, f"allclose_err={err:.2e}"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Roofline report: aggregates artifacts/dryrun/*.json into the §Roofline
+table (every baselined (arch x shape) cell on the single-pod mesh).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import write_csv
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(mesh: str = "16x16", strategy: str = "default") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") == mesh and path.endswith(f"__{strategy}.json"):
+            out.append(rec)
+    return out
+
+
+def table(records: list[dict]) -> list[dict]:
+    rows = []
+    for rec in records:
+        rl = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "strategy": rec["strategy"],
+            "chips": rl["chips"],
+            "t_compute_s": rl["t_compute_s"],
+            "t_memory_s": rl["t_memory_s"],
+            "t_collective_s": rl["t_collective_s"],
+            "t_memory_est_s": rl["t_memory_est_s"],
+            "bottleneck": rl["bottleneck"],
+            "bottleneck_est": rl["bottleneck_est"],
+            "model_flops": rl["model_flops"],
+            "useful_flops_frac": rl["useful_flops_frac"],
+            "mfu_upper_bound": rl["mfu_upper_bound"],
+            "mfu_est": rl["mfu_est"],
+            "temp_bytes_per_chip": rec["memory_analysis"].get("temp_size_in_bytes"),
+            "arg_bytes_per_chip": rec["memory_analysis"].get("argument_size_in_bytes"),
+            "compile_s": rec["compile_s"],
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def markdown(rows: list[dict]) -> str:
+    cols = ["arch", "shape", "t_compute_s", "t_memory_est_s", "t_collective_s",
+            "bottleneck_est", "useful_flops_frac", "mfu_est"]
+    lines = ["| " + " | ".join(cols) + " |", "|" + "---|" * len(cols)]
+    for r in rows:
+        lines.append("| " + " | ".join(str(r[c]) for c in cols) + " |")
+    return "\n".join(lines)
+
+
+def main(full: bool = False):
+    rows = table(load_records())
+    write_csv("roofline_16x16", rows)
+    print(f"roofline cells baselined: {len(rows)}")
+    for r in rows:
+        print(f"  {r['arch']:22s} {r['shape']:12s} bottleneck={r['bottleneck_est']:10s} "
+              f"mfu_est={r['mfu_est']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

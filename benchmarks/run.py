@@ -1,0 +1,67 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV summary rows (plus per-experiment
+CSV files under artifacts/bench/).  ``--full`` uses the paper's task counts.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _summary(name: str, rows: list[dict], key: str = "th_tasks_per_s") -> str:
+    if not rows:
+        return f"{name},0,empty"
+    vals = [r[key] for r in rows if key in r]
+    n_tasks = sum(r.get("n_tasks", 0) for r in rows)
+    ovh = [r["ovh_s"] for r in rows if "ovh_s" in r]
+    us_per_task = (sum(ovh) / max(n_tasks, 1)) * 1e6 if ovh else 0.0
+    derived = f"mean_{key}={sum(vals)/len(vals):.1f}" if vals else "n/a"
+    return f"{name},{us_per_task:.2f},{derived}"
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    out = []
+
+    from benchmarks import exp1_per_provider, exp2_cross_provider, exp3a_cross_platform
+    from benchmarks import exp3b_heterogeneous, exp4_facts, kernels_bench, roofline_report
+
+    print("== Exp 1: per-provider scaling (OVH/TH/TPT, MCPP vs SCPP) ==")
+    r1 = exp1_per_provider.main(full)
+    out.append(_summary("exp1_per_provider", r1))
+
+    print("== Exp 2: cross-provider aggregation ==")
+    r2 = exp2_cross_provider.main(full)
+    out.append(_summary("exp2_cross_provider", r2))
+
+    print("== Exp 3A: cloud + HPC homogeneous ==")
+    r3a = exp3a_cross_platform.main(full)
+    out.append(_summary("exp3a_cross_platform", r3a))
+
+    print("== Exp 3B: heterogeneous tasks/nodes ==")
+    r3b = exp3b_heterogeneous.main(full)
+    out.append(_summary("exp3b_heterogeneous", r3b))
+
+    print("== Exp 4: FACTS workflows ==")
+    r4 = exp4_facts.main(full)
+    ovh_fracs = [r["ovh_frac"] for r in r4]
+    out.append(f"exp4_facts,{sum(r['ttx_s'] for r in r4)/len(r4)*1e6:.0f},mean_ovh_frac={sum(ovh_fracs)/len(ovh_fracs):.4f}")
+
+    print("== Kernel micro-benchmarks ==")
+    for name, us, derived in kernels_bench.main(full):
+        out.append(f"{name},{us:.1f},{derived}")
+
+    print("== Roofline table (from dry-run artifacts) ==")
+    rl = roofline_report.main(full)
+    if rl:
+        mean_mfu = sum(r["mfu_est"] for r in rl) / len(rl)
+        out.append(f"roofline_cells,{len(rl)},mean_mfu_est={mean_mfu:.4f}")
+
+    print("\nname,us_per_call,derived")
+    for line in out:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, token_batch_spec
+from repro.configs.registry import ARCHS, all_cells, get_arch, get_shape
+
+__all__ = [
+    "SHAPES",
+    "ArchConfig",
+    "ShapeConfig",
+    "token_batch_spec",
+    "ARCHS",
+    "all_cells",
+    "get_arch",
+    "get_shape",
+]

@@ -1,0 +1,355 @@
+"""Hydra: the broker facade (paper §3).
+
+    hydra = Hydra(policy="round_robin", pod_store="memory", partitioning="mcpp")
+    hydra.register_provider(ProviderSpec(name="jet2", platform="cloud", ...))
+    hydra.register_provider(ProviderSpec(name="bridges2", platform="hpc", connector="pilot"))
+    sub = hydra.submit(tasks)
+    sub.wait()
+    print(sub.metrics().row())
+    hydra.shutdown()
+
+Responsibilities (mirroring the paper's Service Proxy):
+  * bind tasks to providers via the configured policy,
+  * partition per-provider workloads into pods (SCPP/MCPP/binpack),
+  * serialize pods via the configured store (disk = faithful baseline,
+    memory = the paper's named optimization),
+  * bulk-submit pods to each provider's manager CONCURRENTLY,
+  * monitor execution, drive retries / re-binding / blacklisting /
+    speculative straggler copies, and
+  * compute OVH / TH / TPT / TTX from the traces.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
+from typing import Optional
+
+from repro.core.fault import StragglerWatchdog, clone_for_speculation
+from repro.core.managers.compute import CaaSManager, ProviderDown
+from repro.core.managers.data import DataManager
+from repro.core.managers.pilot import PilotManager
+from repro.core.partition import partition
+from repro.core.pod import Pod, make_store
+from repro.core.policy import Policy, make_policy
+from repro.core.provider import ProviderHandle, ProviderProxy, ProviderSpec
+from repro.core.task import Task, TaskState
+from repro.runtime.tracing import Metrics, Trace, compute_metrics, now
+
+
+class Submission:
+    """Handle for one submit() call: tasks + pods + the broker run trace."""
+
+    def __init__(self, tasks: list[Task], broker: "Hydra"):
+        self.tasks = tasks
+        self.pods: list[Pod] = []
+        self.run_trace = Trace()
+        self._broker = broker
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        deadline = None if timeout is None else now() + timeout
+        for t in self.tasks:
+            remaining = None if deadline is None else max(0.0, deadline - now())
+            try:
+                t.exception(timeout=remaining)
+            except BaseException:  # TimeoutError / CancelledError / task error
+                pass
+            if deadline is not None and now() > deadline and not t.final:
+                return False
+        return True
+
+    def metrics(self) -> Metrics:
+        return compute_metrics(self.run_trace, self.tasks, self.pods)
+
+    @property
+    def states(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for t in self.tasks:
+            out[t.tstate.value] = out.get(t.tstate.value, 0) + 1
+        return out
+
+
+class Hydra:
+    def __init__(
+        self,
+        policy: str = "round_robin",
+        pod_store: str = "memory",
+        partitioning: str = "mcpp",
+        tasks_per_pod: int = 64,
+        workdir: Optional[str] = None,
+        enable_straggler_mitigation: bool = False,
+        straggler_factor: float = 3.0,
+        fail_fast: bool = False,
+    ):
+        self.workdir = workdir or tempfile.mkdtemp(prefix="hydra_")
+        os.makedirs(self.workdir, exist_ok=True)
+        self.proxy = ProviderProxy()
+        self.policy: Policy = make_policy(policy)
+        self.store = make_store(pod_store, self.workdir)
+        self.partitioning = partitioning
+        self.tasks_per_pod = tasks_per_pod
+        self.fail_fast = fail_fast
+        self.data = DataManager(os.path.join(self.workdir, "data"))
+        self._managers: dict[str, object] = {}
+        self._lock = threading.RLock()
+        self._fault_lock = threading.RLock()  # serializes orphan collection/rebind
+        self._claimed: set[str] = set()  # task uids currently being re-bound
+        self._dispatch = ThreadPoolExecutor(max_workers=8, thread_name_prefix="hydra-dispatch")
+        self._submissions: list[Submission] = []
+        self.watchdog: Optional[StragglerWatchdog] = None
+        if enable_straggler_mitigation:
+            self.watchdog = StragglerWatchdog(
+                running=self._running_tasks,
+                duplicate=self._speculate,
+                factor=straggler_factor,
+            )
+            self.watchdog.start()
+
+    def _running_tasks(self) -> list[Task]:
+        with self._lock:
+            return [
+                t
+                for sub in self._submissions
+                for t in sub.tasks
+                if t.tstate == TaskState.RUNNING
+            ]
+
+    # ------------------------------------------------------------------
+    # Provider lifecycle (elastic: add/remove at runtime)
+    # ------------------------------------------------------------------
+    def register_provider(self, spec: ProviderSpec) -> ProviderHandle:
+        handle = self.proxy.register(spec)
+        mgr_cls = PilotManager if spec.connector == "pilot" else CaaSManager
+        with self._lock:
+            self._managers[spec.name] = mgr_cls(handle, on_task_done=self._on_task_done)
+        self.data.register_site(spec.name)
+        return handle
+
+    def remove_provider(self, name: str, drain: bool = True):
+        """Elastic scale-down: stop a provider; re-bind its unfinished tasks."""
+        with self._lock:
+            mgr = self._managers.pop(name)
+            handle = self.proxy.get(name)
+            handle.healthy = False
+        mgr.fail()  # reject anything in flight
+        with self._fault_lock:
+            orphans = self._collect_orphans(name)
+            self._rebind_and_resubmit(orphans, exclude=name)
+        mgr.shutdown(wait=drain)
+
+    def providers(self) -> list[str]:
+        return [h.name for h in self.proxy.healthy()]
+
+    def manager(self, name: str):
+        return self._managers[name]
+
+    # ------------------------------------------------------------------
+    # Submission
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        tasks: list[Task],
+        partitioning: Optional[str] = None,
+        tasks_per_pod: Optional[int] = None,
+    ) -> Submission:
+        model = partitioning or self.partitioning
+        tpp = tasks_per_pod or self.tasks_per_pod
+        sub = Submission(tasks, self)
+        with self._lock:
+            self._submissions.append(sub)
+        rt = sub.run_trace
+
+        # -- bind ----------------------------------------------------------
+        rt.add("bind_start")
+        healthy = self.proxy.healthy()
+        if not healthy:
+            raise RuntimeError("no healthy providers registered")
+        by_provider: dict[str, list[Task]] = {}
+        names = self.policy.bind_bulk(tasks, healthy)
+        for t, name in zip(tasks, names):
+            t.provider = name
+            t.advance(TaskState.BOUND)
+            by_provider.setdefault(name, []).append(t)
+        rt.add("bind_done")
+
+        # -- partition -------------------------------------------------------
+        rt.add("partition_start")
+        pods: list[Pod] = []
+        for name, ts in by_provider.items():
+            ppods = partition(ts, name, model=model, tasks_per_pod=tpp)
+            for p in ppods:
+                for t in p.tasks:
+                    t.advance(TaskState.PARTITIONED)
+            pods.extend(ppods)
+        sub.pods.extend(pods)
+        rt.add("partition_done")
+
+        # -- serialize ---------------------------------------------------------
+        rt.add("serialize_start")
+        for p in pods:
+            self.store.serialize(p)
+        rt.add("serialize_done")
+
+        # -- bulk submit (concurrently across providers) -----------------------
+        rt.add("submit_start")
+        per_provider: dict[str, list[Pod]] = {}
+        for p in pods:
+            per_provider.setdefault(p.provider, []).append(p)
+        futs = [
+            self._dispatch.submit(self._submit_to_provider, name, ppods)
+            for name, ppods in per_provider.items()
+        ]
+        futures_wait(futs)
+        for f in futs:
+            exc = f.exception()
+            if exc is not None and not isinstance(exc, ProviderDown):
+                raise exc
+        rt.add("submit_done")
+        return sub
+
+    def _submit_to_provider(self, name: str, pods: list[Pod]):
+        try:
+            self._managers[name].submit_pods(pods)
+        except ProviderDown:
+            self._handle_provider_down(name)
+            raise
+
+    # ------------------------------------------------------------------
+    # Completion / fault handling
+    # ------------------------------------------------------------------
+    def _on_task_done(self, task: Task, provider: str, failed: bool):
+        t0, t1 = task.trace.first("exec_start"), task.trace.last("exec_done")
+        if t0 is not None and t1 is not None:
+            self.policy.observe(provider, t1 - t0)
+            if self.watchdog:
+                self.watchdog.observe_completion(t1 - t0)
+        else:
+            self.policy.observe(provider, 1e-3)
+        if not failed:
+            return
+        exc = getattr(task, "last_error", None)
+        if isinstance(exc, ProviderDown):
+            self._handle_provider_down(provider)
+            return
+        with self._fault_lock:
+            if task.uid in self._claimed or task.tstate != TaskState.FAILED:
+                return  # already claimed / re-bound / finished elsewhere
+            if task.retries < task.max_retries:
+                self._claimed.add(task.uid)
+                task.reset_for_retry()
+            else:
+                if self.fail_fast:
+                    self._cancel_all_pending()
+                return
+            self._rebind_and_resubmit([task], exclude=provider)
+
+    def _handle_provider_down(self, name: str):
+        with self._lock:
+            handle = self.proxy.get(name)
+            if handle.healthy:
+                handle.healthy = False
+                handle.trace.add("blacklisted")
+        # always sweep for orphans: late ProviderDown failures arrive after
+        # the initial blacklisting and still need re-binding
+        with self._fault_lock:
+            orphans = self._collect_orphans(name)
+            self._rebind_and_resubmit(orphans, exclude=name)
+
+    def _collect_orphans(self, provider: str) -> list[Task]:
+        """Claim + reset every non-final task bound to a dead provider.
+        Must be called under _fault_lock; claims prevent double re-binding."""
+        with self._lock:
+            orphans = [
+                t
+                for sub in self._submissions
+                for t in sub.tasks
+                if t.provider == provider
+                and t.uid not in self._claimed
+                # FAILED is a *final* state but retryable: include it here
+                and (not t.final or t.tstate == TaskState.FAILED)
+            ]
+            self._claimed.update(t.uid for t in orphans)
+        out = []
+        for t in orphans:
+            # force non-final tasks back to a BOUND-able state
+            if t.tstate == TaskState.RUNNING:
+                from repro.core.managers.compute import ProviderDown as PD
+
+                t.mark_failed(PD(provider))
+            if t.tstate == TaskState.FAILED:
+                if t.retries >= t.max_retries:
+                    self._release_claim(t)
+                    continue
+                t.reset_for_retry()
+            elif t.tstate in (TaskState.SUBMITTED, TaskState.PARTITIONED):
+                t.try_advance(TaskState.BOUND)
+            elif t.tstate == TaskState.DONE:  # finished in the race window
+                self._release_claim(t)
+                continue
+            out.append(t)
+        return out
+
+    def _release_claim(self, task: Task):
+        with self._lock:
+            self._claimed.discard(task.uid)
+
+    def _rebind_and_resubmit(self, tasks: list[Task], exclude: Optional[str] = None):
+        if not tasks:
+            return
+        healthy = [h for h in self.proxy.healthy() if h.name != exclude]
+        if not healthy:
+            for t in tasks:
+                if not t.done():
+                    t.set_exception(RuntimeError("no healthy providers for retry"))
+            return
+        by_provider: dict[str, list[Task]] = {}
+        for t in tasks:
+            name = self.policy.bind(t, healthy)
+            t.provider = name
+            t.trace.add(f"rebound:{name}")
+            by_provider.setdefault(name, []).append(t)
+        for name, ts in by_provider.items():
+            pods = partition(ts, name, model="mcpp", tasks_per_pod=self.tasks_per_pod)
+            for p in pods:
+                for t in p.tasks:
+                    # a task may have completed in the race window (authoritative
+                    # completion); the pod runner skips final tasks
+                    t.try_advance(TaskState.PARTITIONED)
+                    self._release_claim(t)  # re-claimable if this provider dies too
+                self.store.serialize(p)
+            self._dispatch.submit(self._submit_to_provider, name, pods)
+
+    def _speculate(self, task: Task):
+        """Straggler: launch a speculative clone on a different provider."""
+        healthy = [h for h in self.proxy.healthy() if h.name != task.provider]
+        if not healthy:
+            return
+        shadow = clone_for_speculation(task)
+        name = self.policy.bind(shadow, healthy)
+        shadow.provider = name
+        shadow.advance(TaskState.BOUND)
+        pods = partition([shadow], name, model="scpp")
+        for p in pods:
+            shadow.advance(TaskState.PARTITIONED)
+            self.store.serialize(p)
+        self._dispatch.submit(self._submit_to_provider, name, pods)
+
+    def _cancel_all_pending(self):
+        with self._lock:
+            for sub in self._submissions:
+                for t in sub.tasks:
+                    if not t.final:
+                        t.mark_canceled()
+
+    # ------------------------------------------------------------------
+    def shutdown(self, wait: bool = True):
+        """Graceful teardown of every instantiated resource (paper §3.2)."""
+        if self.watchdog:
+            self.watchdog.stop()
+        with self._lock:
+            managers = list(self._managers.values())
+        for m in managers:
+            m.shutdown(wait=wait)
+        self._dispatch.shutdown(wait=wait)
+        self.store.cleanup()

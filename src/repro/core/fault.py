@@ -1,0 +1,108 @@
+"""Fault tolerance: retry/re-bind on task failure, provider blacklisting on
+outage, and straggler mitigation via speculative duplicate dispatch.
+
+The paper's Hydra ensures graceful teardown on failure; at 1000+ node scale
+the broker additionally has to *survive* provider loss.  Policy here:
+
+  task failure     -> reset FAILED -> BOUND, re-bind to another healthy
+                      provider (never the one that just failed it), resubmit;
+                      give up after task.max_retries and surface the error.
+  provider outage  -> blacklist the provider, fail-fast its in-flight tasks,
+                      re-bind + resubmit everything non-final it owned.
+  straggler        -> a watchdog compares running tasks against
+                      factor * median(completed runtimes); slow tasks get a
+                      speculative clone on another provider; first completion
+                      wins (the Task state machine makes the loser a no-op).
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from typing import Callable, Optional
+
+from repro.core.task import Task, TaskState
+from repro.runtime.tracing import now
+
+
+class StragglerWatchdog:
+    def __init__(
+        self,
+        running: Callable[[], list[Task]],
+        duplicate: Callable[[Task], None],
+        factor: float = 3.0,
+        min_samples: int = 5,
+        interval_s: float = 0.05,
+        min_runtime_s: float = 0.02,
+    ):
+        self.running = running
+        self.duplicate = duplicate
+        self.factor = factor
+        self.min_samples = min_samples
+        self.interval_s = interval_s
+        self.min_runtime_s = min_runtime_s
+        self.completed_runtimes: list[float] = []
+        self.duplicated: set[str] = set()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True, name="straggler-watchdog")
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2.0)
+
+    def observe_completion(self, runtime_s: float):
+        with self._lock:
+            self.completed_runtimes.append(runtime_s)
+
+    def _loop(self):
+        while not self._stop.wait(self.interval_s):
+            with self._lock:
+                if len(self.completed_runtimes) < self.min_samples:
+                    continue
+                med = statistics.median(self.completed_runtimes)
+            threshold = max(self.factor * med, self.min_runtime_s)
+            t_now = now()
+            for task in self.running():
+                if task.uid in self.duplicated or task.final:
+                    continue
+                t0 = task.trace.first("exec_start")
+                if t0 is not None and (t_now - t0) > threshold:
+                    with self._lock:
+                        if task.uid in self.duplicated:
+                            continue
+                        self.duplicated.add(task.uid)
+                    task.trace.add("straggler_detected")
+                    self.duplicate(task)
+
+
+def clone_for_speculation(task: Task) -> Task:
+    """A shadow task whose completion completes the original."""
+    shadow = Task(
+        kind=task.kind,
+        fn=task.fn,
+        resources=task.resources,
+        arch=task.arch,
+        shape=task.shape,
+        step_kind=task.step_kind,
+        duration=0.0,  # re-execution of a straggling sleep is instant by design
+        payload=task.payload,
+        max_retries=0,
+    )
+    shadow.trace.add("speculative_clone_of:" + task.uid)
+
+    def forward(fut):
+        if fut.cancelled():
+            return
+        exc = fut.exception()
+        if exc is None and not task.final:
+            task.trace.add("speculative_win")
+            task.mark_done(fut.result())
+
+    shadow.add_done_callback(forward)
+    return shadow

@@ -1,0 +1,213 @@
+"""CaaS Manager (paper §3.1) adapted to TPU pools: the "container service" is
+a compiled-artifact service.
+
+  container image  == compiled XLA executable for (arch, shape, step kind,
+                      strategy); building the image == lower+compile; the
+                      image registry == the content-addressed compile cache.
+  pod              == a dispatch group submitted to the pool in ONE bulk call
+                      (the paper's bulk submission that keeps OVH low).
+
+The manager traces env setup/teardown per pod (TPT per the paper) and task
+exec windows (TTX), executes noop/sleep/callable tasks directly, and routes
+``compute`` tasks through the CompiledArtifactCache onto the provider's
+device slice.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Optional
+
+from repro.core.pod import Pod
+from repro.core.provider import ProviderHandle
+from repro.core.task import Task, TaskState
+
+
+class ProviderDown(RuntimeError):
+    pass
+
+
+class CompiledArtifactCache:
+    """Content-addressed cache of compiled step functions (the "image registry")."""
+
+    def __init__(self):
+        self._cache: dict[tuple, Any] = {}
+        self._lock = threading.Lock()
+        self.builds = 0
+        self.hits = 0
+
+    def get_or_build(self, key: tuple, build: Callable[[], Any]):
+        with self._lock:
+            if key in self._cache:
+                self.hits += 1
+                return self._cache[key]
+        artifact = build()  # compile outside the lock; duplicate builds are benign
+        with self._lock:
+            if key not in self._cache:
+                self._cache[key] = artifact
+                self.builds += 1
+            return self._cache[key]
+
+
+# Shared across managers: images are provider-agnostic, like a registry.
+ARTIFACTS = CompiledArtifactCache()
+
+
+class ComputeRuntime:
+    """Executes ``compute`` tasks: builds/fetches the compiled step and runs a
+    reduced-config instance on the provider's devices (CPU container)."""
+
+    def __init__(self):
+        self._states: dict[tuple, Any] = {}
+        self._lock = threading.Lock()
+
+    def run(self, task: Task) -> Any:
+        import jax
+
+        from repro.configs import get_arch
+        from repro.data.pipeline import DataConfig, batch_at
+        from repro.models.model import Model
+        from repro.optim import adamw
+        from repro.train import step as step_lib
+        from repro.parallel.sharding import STRATEGIES
+
+        arch = get_arch(task.arch).reduced()
+        step_kind = task.step_kind or "train"
+        key = (task.arch, step_kind)
+
+        def build():
+            model = Model(arch)
+            mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+            strategy = STRATEGIES["tp"]
+            if step_kind == "train":
+                fn = jax.jit(
+                    step_lib.make_train_step(model, strategy, mesh, adamw.AdamWConfig())
+                )
+            elif step_kind == "prefill":
+                fn = jax.jit(step_lib.make_prefill_step(model, strategy, mesh, cache_len=32))
+            else:
+                raise ValueError(step_kind)
+            return model, fn
+
+        model, fn = ARTIFACTS.get_or_build(key, build)
+        dc = DataConfig(
+            vocab_size=arch.vocab_size, seq_len=16, global_batch=2,
+            enc_len=arch.enc_len_train, d_model=arch.d_model,
+            n_img_tokens=arch.n_img_tokens, family=arch.family,
+        )
+        batch = batch_at(dc, task.retries)
+        with self._lock:
+            state = self._states.get(key)
+            if state is None:
+                import jax as _jax
+
+                state = step_lib.init_train_state(model, _jax.random.key(0))
+                self._states[key] = state
+        if step_kind == "train":
+            params, opt, metrics = fn(state[0], state[1], batch)
+            with self._lock:
+                self._states[key] = (params, opt)
+            return {k: float(v) for k, v in metrics.items()}
+        logits, _ = fn(state[0], {k: v for k, v in batch.items() if k != "labels"})
+        return {"logits_shape": list(logits.shape)}
+
+
+COMPUTE_RUNTIME = ComputeRuntime()
+
+
+class CaaSManager:
+    """One per cloud-like provider.  Bulk pod submission + tracing."""
+
+    def __init__(self, handle: ProviderHandle, on_task_done: Optional[Callable] = None):
+        self.handle = handle
+        self.spec = handle.spec
+        self.on_task_done = on_task_done
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.spec.concurrency, thread_name_prefix=f"caas-{handle.name}"
+        )
+        self._down = threading.Event()
+        self._inflight: set = set()
+        self._lock = threading.Lock()
+
+    # -- lifecycle -----------------------------------------------------
+    def fail(self):
+        """Simulate a provider outage (tests / fault-tolerance benchmarks)."""
+        self._down.set()
+
+    def recover(self):
+        self._down.clear()
+
+    @property
+    def down(self) -> bool:
+        return self._down.is_set()
+
+    def shutdown(self, wait: bool = True):
+        self._pool.shutdown(wait=wait, cancel_futures=not wait)
+
+    # -- submission ----------------------------------------------------
+    def submit_pods(self, pods: list[Pod]):
+        """Bulk submission: one enqueue per pod (not per task)."""
+        if self.down:
+            raise ProviderDown(self.handle.name)
+        if self.spec.submit_latency_s:
+            time.sleep(self.spec.submit_latency_s)  # modeled API round-trip
+        futures = []
+        for pod in pods:
+            for t in pod.tasks:
+                t.try_advance(TaskState.SUBMITTED)
+                t.trace.add("submitted")
+            futures.append(self._pool.submit(self._run_pod, pod))
+        return futures
+
+    # -- execution -----------------------------------------------------
+    def _run_pod(self, pod: Pod):
+        pod.trace.add("env_setup_start")
+        if self.spec.env_setup_s:
+            time.sleep(self.spec.env_setup_s * (1 if pod.model != "scpp" else 1.0))
+        pod.trace.add("env_setup_done")
+        try:
+            for t in pod.tasks:
+                if self.down:
+                    # fail the remaining tasks so the broker re-binds them
+                    for rest in pod.tasks:
+                        if (
+                            not rest.final
+                            and rest.provider == self.handle.name
+                            and rest.mark_failed(ProviderDown(self.handle.name))
+                            and self.on_task_done
+                        ):
+                            self.on_task_done(rest, self.handle.name, failed=True)
+                    return
+                self._run_task(t)
+        finally:
+            pod.trace.add("env_teardown_start")
+            pod.trace.add("env_teardown_done")
+
+    def _run_task(self, task: Task):
+        if task.final:  # canceled or speculatively completed elsewhere
+            return
+        if not task.try_advance(TaskState.RUNNING):
+            return
+        task.trace.add("exec_start")
+        try:
+            result = self._execute(task)
+        except BaseException as e:
+            if task.mark_failed(e) and self.on_task_done:
+                self.on_task_done(task, self.handle.name, failed=True)
+            return
+        task.mark_done(result)
+        if self.on_task_done:
+            self.on_task_done(task, self.handle.name, failed=False)
+
+    def _execute(self, task: Task) -> Any:
+        if task.kind == "noop":
+            return None
+        if task.kind == "sleep":
+            time.sleep(task.duration)
+            return None
+        if task.kind == "callable":
+            return task.fn() if task.fn else None
+        if task.kind == "compute":
+            return COMPUTE_RUNTIME.run(task)
+        raise ValueError(task.kind)

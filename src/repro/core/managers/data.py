@@ -1,0 +1,105 @@
+"""Data Manager (paper §3.1): inter- and cross-provider data operations via a
+unified API — copy, move, link, delete, list — plus checkpoint staging.
+
+Each provider has a *site store* (a directory namespace); a *shared* store
+models the cross-site object store.  On a real fleet these verbs map to the
+pod-local SSD / pod NFS / cross-region object store; the API is identical.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Optional
+
+from repro.runtime.tracing import Trace
+
+
+class DataManager:
+    def __init__(self, root: str):
+        self.root = root
+        self.trace = Trace()
+        os.makedirs(os.path.join(root, "shared"), exist_ok=True)
+
+    def register_site(self, provider: str) -> str:
+        path = self._site(provider)
+        os.makedirs(path, exist_ok=True)
+        return path
+
+    def _site(self, site: str) -> str:
+        return os.path.join(self.root, site)
+
+    def _resolve(self, site: str, rel: str) -> str:
+        path = os.path.normpath(os.path.join(self._site(site), rel))
+        if not path.startswith(os.path.normpath(self._site(site))):
+            raise ValueError(f"path escape: {site}:{rel}")
+        return path
+
+    # -- the paper's five verbs ------------------------------------------
+    def copy(self, src_site: str, src: str, dst_site: str, dst: str) -> str:
+        s, d = self._resolve(src_site, src), self._resolve(dst_site, dst)
+        os.makedirs(os.path.dirname(d), exist_ok=True)
+        if os.path.isdir(s):
+            shutil.copytree(s, d, dirs_exist_ok=True)
+        else:
+            shutil.copy2(s, d)
+        self.trace.add(f"copy:{src_site}:{src}->{dst_site}:{dst}")
+        return d
+
+    def move(self, src_site: str, src: str, dst_site: str, dst: str) -> str:
+        s, d = self._resolve(src_site, src), self._resolve(dst_site, dst)
+        os.makedirs(os.path.dirname(d), exist_ok=True)
+        shutil.move(s, d)
+        self.trace.add(f"move:{src_site}:{src}->{dst_site}:{dst}")
+        return d
+
+    def link(self, src_site: str, src: str, dst_site: str, dst: str) -> str:
+        """Zero-copy intra-filesystem staging (same-site fast path)."""
+        s, d = self._resolve(src_site, src), self._resolve(dst_site, dst)
+        os.makedirs(os.path.dirname(d), exist_ok=True)
+        if os.path.lexists(d):
+            os.unlink(d)
+        os.symlink(os.path.abspath(s), d)
+        self.trace.add(f"link:{src_site}:{src}->{dst_site}:{dst}")
+        return d
+
+    def delete(self, site: str, rel: str) -> None:
+        p = self._resolve(site, rel)
+        if os.path.isdir(p) and not os.path.islink(p):
+            shutil.rmtree(p)
+        elif os.path.lexists(p):
+            os.unlink(p)
+        self.trace.add(f"delete:{site}:{rel}")
+
+    def list(self, site: str, rel: str = ".") -> list[str]:
+        p = self._resolve(site, rel)
+        if not os.path.isdir(p):
+            return []
+        return sorted(os.listdir(p))
+
+    def exists(self, site: str, rel: str) -> bool:
+        return os.path.lexists(self._resolve(site, rel))
+
+    def put_bytes(self, site: str, rel: str, payload: bytes) -> str:
+        p = self._resolve(site, rel)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "wb") as f:
+            f.write(payload)
+        return p
+
+    def get_bytes(self, site: str, rel: str) -> bytes:
+        with open(self._resolve(site, rel), "rb") as f:
+            return f.read()
+
+    # -- checkpoint staging ------------------------------------------------
+    def stage_checkpoint(self, provider: str, ckpt_dir: str, step: int) -> str:
+        """Stage a local checkpoint step dir to the shared store (async save
+        path calls this after the write completes)."""
+        name = f"step_{step:08d}"
+        src = os.path.join(ckpt_dir, name)
+        dst = self._resolve("shared", os.path.join("ckpt", provider, name))
+        os.makedirs(os.path.dirname(dst), exist_ok=True)
+        if os.path.isdir(dst):
+            shutil.rmtree(dst)
+        shutil.copytree(src, dst)
+        self.trace.add(f"stage_ckpt:{provider}:{step}")
+        return dst

@@ -1,0 +1,155 @@
+"""Binding policies: which provider runs which task (paper §1: "user-specified
+brokering policies determine whether tasks ... execute on cloud or HPC").
+
+The paper's released Hydra binds statically before execution; *adaptive*
+runtime re-binding is its stated future work ("dynamic and adaptive binding
+of tasks to resources at runtime", §6) and is implemented here as
+``AdaptivePolicy`` (beyond-paper, measured in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Optional
+
+from repro.core.provider import ProviderHandle
+from repro.core.task import Task
+
+
+class Policy:
+    name = "base"
+
+    def bind(self, task: Task, providers: list[ProviderHandle]) -> str:
+        raise NotImplementedError
+
+    def bind_bulk(self, tasks: list[Task], providers: list[ProviderHandle]) -> list[str]:
+        """Vectorized binding (§Perf): one eligibility pass for homogeneous
+        spans instead of a per-task policy call.  Default falls back to the
+        per-task path; policies may override."""
+        return [self.bind(t, providers) for t in tasks]
+
+    def observe(self, provider: str, runtime_s: float) -> None:
+        """Runtime feedback hook (used by adaptive policies)."""
+
+    def _eligible(self, task: Task, providers: list[ProviderHandle]) -> list[ProviderHandle]:
+        if task.pinned_provider:
+            pin = [p for p in providers if p.name == task.pinned_provider]
+            if pin:
+                return pin
+        ok = [p for p in providers if task.resources.fits(p.spec.capacity())]
+        if not ok:
+            raise RuntimeError(
+                f"no provider can fit task {task.uid} requiring {vars(task.resources)}"
+            )
+        return ok
+
+
+class RoundRobinPolicy(Policy):
+    name = "round_robin"
+
+    def __init__(self):
+        self._n = 0
+        self._lock = threading.Lock()
+
+    def bind(self, task: Task, providers: list[ProviderHandle]) -> str:
+        ok = self._eligible(task, providers)
+        with self._lock:
+            choice = ok[self._n % len(ok)]
+            self._n += 1
+        return choice.name
+
+    def bind_bulk(self, tasks: list[Task], providers: list[ProviderHandle]) -> list[str]:
+        """One eligibility check per distinct (resources, pin) signature;
+        round-robin assignment in a single locked pass."""
+        sig_cache: dict = {}
+        out = []
+        with self._lock:
+            for t in tasks:
+                sig = (t.pinned_provider, t.resources.cpus, t.resources.accels, t.resources.memory_mb)
+                ok = sig_cache.get(sig)
+                if ok is None:
+                    ok = self._eligible(t, providers)
+                    sig_cache[sig] = ok
+                out.append(ok[self._n % len(ok)].name)
+                self._n += 1
+        return out
+
+
+class CapabilityPolicy(Policy):
+    """Pick the provider with the most spare capability for the task class:
+    accelerator tasks -> accel-richest pool; cpu tasks -> cpu-richest pool."""
+
+    name = "capability"
+
+    def bind(self, task: Task, providers: list[ProviderHandle]) -> str:
+        ok = self._eligible(task, providers)
+        if task.resources.accels > 0:
+            return max(ok, key=lambda p: p.spec.capacity().accels).name
+        return max(ok, key=lambda p: p.spec.capacity().cpus).name
+
+
+class LoadAwarePolicy(Policy):
+    """Least-outstanding-tasks binding (queue-depth balancing)."""
+
+    name = "load_aware"
+
+    def __init__(self):
+        self.outstanding: dict[str, int] = defaultdict(int)
+        self._lock = threading.Lock()
+
+    def bind(self, task: Task, providers: list[ProviderHandle]) -> str:
+        ok = self._eligible(task, providers)
+        with self._lock:
+            choice = min(ok, key=lambda p: self.outstanding[p.name])
+            self.outstanding[choice.name] += 1
+            return choice.name
+
+    def observe(self, provider: str, runtime_s: float) -> None:
+        with self._lock:
+            self.outstanding[provider] = max(0, self.outstanding[provider] - 1)
+
+
+class AdaptivePolicy(Policy):
+    """Throughput-weighted binding (beyond-paper: the paper's future work).
+
+    Keeps an EWMA of per-provider task service time and routes proportionally
+    more work to faster providers, while still balancing outstanding load.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, alpha: float = 0.2):
+        self.alpha = alpha
+        self.ewma: dict[str, float] = {}
+        self.outstanding: dict[str, int] = defaultdict(int)
+        self._lock = threading.Lock()
+
+    def bind(self, task: Task, providers: list[ProviderHandle]) -> str:
+        ok = self._eligible(task, providers)
+        with self._lock:
+            def score(p: ProviderHandle) -> float:
+                rate = 1.0 / max(self.ewma.get(p.name, 1e-3), 1e-6)
+                # expected finish time ~ (queue + 1) / service rate
+                return (self.outstanding[p.name] + 1) / rate
+
+            choice = min(ok, key=score)
+            self.outstanding[choice.name] += 1
+            return choice.name
+
+    def observe(self, provider: str, runtime_s: float) -> None:
+        with self._lock:
+            cur = self.ewma.get(provider)
+            self.ewma[provider] = (
+                runtime_s if cur is None else (1 - self.alpha) * cur + self.alpha * runtime_s
+            )
+            self.outstanding[provider] = max(0, self.outstanding[provider] - 1)
+
+
+POLICIES = {
+    p.name: p
+    for p in (RoundRobinPolicy, CapabilityPolicy, LoadAwarePolicy, AdaptivePolicy)
+}
+
+
+def make_policy(name: str) -> Policy:
+    return POLICIES[name]()

@@ -1,0 +1,191 @@
+"""Task: the unit of brokered work (paper §3.2: "Task extends
+concurrent.futures.Future").
+
+A Task is a Future-like object holding the workload description, resource
+requirements, provider binding, a strict state machine, and a trace of
+timestamped events.  Kinds:
+
+  noop      - zero-work task (the paper's overhead-isolation instrument)
+  callable  - arbitrary python callable (the "executable" task type)
+  compute   - a JAX workload: (arch, shape, step kind) executed via a
+              compiled artifact (the "container" task type on TPU pools)
+  sleep     - fixed-duration task (paper Exp 3B heterogeneous workloads)
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Optional
+
+from repro.runtime.tracing import Counter, Trace
+
+_ids = Counter("task")
+
+
+class TaskState(str, Enum):
+    NEW = "NEW"
+    BOUND = "BOUND"  # assigned to a provider by the binding policy
+    PARTITIONED = "PARTITIONED"  # placed into a pod
+    SUBMITTED = "SUBMITTED"  # pod handed to the provider connector
+    RUNNING = "RUNNING"
+    DONE = "DONE"
+    FAILED = "FAILED"
+    CANCELED = "CANCELED"
+
+
+FINAL_STATES = {TaskState.DONE, TaskState.FAILED, TaskState.CANCELED}
+
+LEGAL = {
+    TaskState.NEW: {TaskState.BOUND, TaskState.CANCELED},
+    TaskState.BOUND: {TaskState.PARTITIONED, TaskState.BOUND, TaskState.CANCELED},
+    TaskState.PARTITIONED: {TaskState.SUBMITTED, TaskState.BOUND, TaskState.CANCELED},
+    TaskState.SUBMITTED: {TaskState.RUNNING, TaskState.BOUND, TaskState.FAILED, TaskState.CANCELED},
+    TaskState.RUNNING: {TaskState.DONE, TaskState.FAILED, TaskState.CANCELED},
+    TaskState.DONE: set(),
+    TaskState.FAILED: {TaskState.BOUND},  # retry: re-bind
+    TaskState.CANCELED: set(),
+}
+
+
+class IllegalTransition(RuntimeError):
+    pass
+
+
+@dataclass
+class Resources:
+    """Per-task resource requirements (the paper's cpu/gpu/memory triple)."""
+
+    cpus: int = 1
+    accels: int = 0  # GPUs in the paper; TPU chips here
+    memory_mb: int = 256
+
+    def fits(self, cap: "Resources") -> bool:
+        return self.cpus <= cap.cpus and self.accels <= cap.accels and self.memory_mb <= cap.memory_mb
+
+
+class Task(Future):
+    def __init__(
+        self,
+        kind: str = "noop",
+        fn: Optional[Callable[[], Any]] = None,
+        *,
+        resources: Optional[Resources] = None,
+        provider: Optional[str] = None,  # user-pinned provider (paper: task provider)
+        arch: Optional[str] = None,
+        shape: Optional[str] = None,
+        step_kind: Optional[str] = None,
+        duration: float = 0.0,  # for kind="sleep"
+        payload: Any = None,
+        max_retries: int = 2,
+    ):
+        super().__init__()
+        assert kind in ("noop", "callable", "compute", "sleep"), kind
+        self.uid = _ids.next()
+        self.kind = kind
+        self.fn = fn
+        self.resources = resources or Resources()
+        self.pinned_provider = provider
+        self.arch, self.shape, self.step_kind = arch, shape, step_kind
+        self.duration = duration
+        self.payload = payload
+        self.max_retries = max_retries
+        self.retries = 0
+        self.provider: Optional[str] = provider
+        self.pod_uid: Optional[str] = None
+        self.trace = Trace()
+        self._state_lock = threading.RLock()
+        self._tstate = TaskState.NEW
+        self.trace.add("created")
+
+    # ------------------------------------------------------------------
+    @property
+    def tstate(self) -> TaskState:
+        return self._tstate
+
+    def advance(self, new: TaskState) -> None:
+        with self._state_lock:
+            if new not in LEGAL[self._tstate]:
+                raise IllegalTransition(f"{self.uid}: {self._tstate.value} -> {new.value}")
+            self._tstate = new
+            self.trace.add(f"state:{new.value}")
+
+    def try_advance(self, new: TaskState) -> bool:
+        with self._state_lock:
+            if new not in LEGAL[self._tstate]:
+                return False
+            self._tstate = new
+            self.trace.add(f"state:{new.value}")
+            return True
+
+    @property
+    def final(self) -> bool:
+        return self._tstate in FINAL_STATES
+
+    # ------------------------------------------------------------------
+    def mark_done(self, result: Any = None) -> None:
+        """Completion is authoritative and idempotent: with re-binding and
+        speculative copies the same work may finish more than once (or finish
+        on the 'old' provider after a re-bind) - first completion wins, any
+        state.  At-least-once execution, exactly-once completion."""
+        with self._state_lock:
+            if self._tstate in FINAL_STATES:  # duplicate completion: no-op
+                return
+            self._tstate = TaskState.DONE
+            self.trace.add("state:DONE")
+        self.trace.add("exec_done")
+        if not self.done():
+            self.set_result(result)
+
+    def mark_failed(self, exc: BaseException) -> bool:
+        """Race-safe: a stale failure (e.g. from a provider the task was
+        already re-bound away from) is ignored unless the task is actually
+        in-flight.  Returns True iff this call performed the transition."""
+        with self._state_lock:
+            if self._tstate not in (TaskState.SUBMITTED, TaskState.RUNNING):
+                return False
+            self._tstate = TaskState.FAILED
+            self.trace.add("state:FAILED")
+        self.trace.add("exec_failed")
+        self.last_error = exc
+        if self.retries >= self.max_retries and not self.done():
+            self.set_exception(exc)
+        return True
+
+    def mark_canceled(self) -> None:
+        with self._state_lock:
+            if self._tstate in FINAL_STATES:
+                return
+            self._tstate = TaskState.CANCELED
+            self.trace.add("state:CANCELED")
+        if not self.done():
+            self.cancel()
+            if not self.cancelled():  # running futures refuse cancel(); force it
+                self.set_exception(CancelledError(self.uid))
+
+    def reset_for_retry(self) -> None:
+        """FAILED -> BOUND (fault tolerance re-binding)."""
+        with self._state_lock:
+            self.retries += 1
+            self.advance(TaskState.BOUND)
+            self.pod_uid = None
+
+
+class CancelledError(RuntimeError):
+    pass
+
+
+def describe(task: Task) -> dict:
+    """JSON-serializable task description (what gets written into a pod)."""
+    return {
+        "uid": task.uid,
+        "kind": task.kind,
+        "resources": vars(task.resources),
+        "provider": task.provider,
+        "arch": task.arch,
+        "shape": task.shape,
+        "step_kind": task.step_kind,
+        "duration": task.duration,
+        "retries": task.retries,
+    }

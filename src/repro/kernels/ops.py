@@ -1,0 +1,57 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+On non-TPU backends (this CPU container) the kernels execute in interpret
+mode - the kernel body runs step-by-step in Python/XLA so correctness (and
+the BlockSpec tiling logic) is fully exercised without Mosaic.  On a real
+v5e these same calls lower to Mosaic TPU kernels.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import selective_scan as _ss
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+    block_q: int = _fa.DEFAULT_BLOCK_Q, block_k: int = _fa.DEFAULT_BLOCK_K,
+):
+    """q (B,H,Lq,hd); k,v (B,KV,Lk,hd) -> (B,H,Lq,hd)."""
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("block_d",))
+def selective_scan_chunk(x, dt, b, c, a, h0, *, block_d: int = _ss.DEFAULT_BLOCK_D):
+    """One SSM chunk: returns (y (B,chunk,di) f32, h_last (B,di,N) f32)."""
+    return _ss.selective_scan_chunk(x, dt, b, c, a, h0, block_d=block_d, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_d",))
+def rglru_scan(log_a, gx, h0=None, *, block_d: int = _rg.DEFAULT_BLOCK_D):
+    """RG-LRU over a sequence: returns (y (B,L,dr) f32, h_last (B,dr) f32)."""
+    return _rg.rglru_scan(log_a, gx, h0, block_d=block_d, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_f", "block_d"))
+def moe_gmm(
+    x, w, *,
+    block_c: int = _gmm.DEFAULT_BLOCK_C,
+    block_f: int = _gmm.DEFAULT_BLOCK_F,
+    block_d: int = _gmm.DEFAULT_BLOCK_D,
+):
+    """Grouped expert matmul: x (E,C,D) @ w (E,D,F) -> (E,C,F)."""
+    return _gmm.moe_gmm(x, w, block_c=block_c, block_f=block_f, block_d=block_d, interpret=_interpret())

@@ -1,0 +1,70 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel (RecurrentGemma).
+
+    h_t = exp(log_a_t) * h_{t-1} + gx_t          (elementwise over d_rnn)
+
+Grid = (batch, d_rnn blocks); the (block_d,) state lives in registers/VMEM
+and the kernel walks the full sequence with a fori_loop.  The sequential
+walk is the TPU analogue of Griffin's scan (the recurrence is memory-bound:
+one load of log_a/gx and one store of y per step; block_d=512 lanes keeps
+the VPU busy).  Gates/log_a are precomputed outside (they are dense matmuls
+that XLA already maps to the MXU well).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_D = 512
+
+
+def _rglru_kernel(loga_ref, gx_ref, h0_ref, y_ref, h_ref, *, seq: int):
+    h = h0_ref[0].astype(jnp.float32)  # (block_d,)
+
+    def step(t, h):
+        a_t = jnp.exp(loga_ref[0, t, :].astype(jnp.float32))
+        h = a_t * h + gx_ref[0, t, :].astype(jnp.float32)
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, seq, step, h)
+    h_ref[0] = h.astype(h_ref.dtype)
+
+
+def rglru_scan(
+    log_a: jax.Array,  # (B, L, dr) fp32
+    gx: jax.Array,  # (B, L, dr) fp32
+    h0: jax.Array,  # (B, dr) fp32 (zeros if None)
+    *,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+):
+    """Returns (y (B, L, dr) fp32, h_last (B, dr) fp32)."""
+    B, L, dr = log_a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, dr), jnp.float32)
+    block_d = min(block_d, dr)
+    assert dr % block_d == 0, (dr, block_d)
+
+    kernel = functools.partial(_rglru_kernel, seq=L)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, dr // block_d),
+        in_specs=[
+            pl.BlockSpec((1, L, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, L, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, block_d), lambda b, d: (b, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, block_d), lambda b, d: (b, d)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, dr), jnp.float32),
+            jax.ShapeDtypeStruct((B, dr), jnp.float32),
+        ],
+        interpret=interpret,
+    )(log_a, gx, h0)
+    return y, h_last

@@ -1,0 +1,87 @@
+"""Mamba1 selective-scan chunk Pallas TPU kernel.
+
+Computes one sequence chunk of the diagonal SSM recurrence
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t,   y_t = <h_t, C_t>
+carrying the (d_inner, N) state in VMEM across the chunk's timesteps.
+
+TPU mapping: grid = (batch, d_inner blocks).  Per grid cell the kernel holds
+    x/dt tiles   (chunk, block_d)      ~ chunk*block_d*4B
+    B/C tiles    (chunk, N)
+    state        (block_d, N) fp32 scratch
+entirely in VMEM and walks the chunk sequentially with a fori_loop - the
+hardware-aware "materialize (L, d, N) only chunk-wise" trick from the Mamba
+paper, re-tiled for VMEM instead of SRAM (see DESIGN.md hardware adaptation).
+block_d defaults to 512 (multiple of the 128-lane width); the fp32 footprint
+at chunk=256, N=16 is ~1.6 MB, well inside 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_D = 512
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, h_ref, *, chunk: int):
+    a = a_ref[...].astype(jnp.float32)  # (block_d, N)
+    h = h0_ref[0].astype(jnp.float32)  # (block_d, N)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)  # (block_d,)
+        x_t = x_ref[0, t, :].astype(jnp.float32)
+        b_t = b_ref[0, t, :].astype(jnp.float32)  # (N,)
+        c_t = c_ref[0, t, :].astype(jnp.float32)
+        da = jnp.exp(dt_t[:, None] * a)  # (block_d, N)
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_ref[0, t, :] = jnp.sum(h * c_t[None, :], axis=-1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h)
+    h_ref[0] = h.astype(h_ref.dtype)
+
+
+def selective_scan_chunk(
+    x: jax.Array,  # (B, chunk, di)
+    dt: jax.Array,  # (B, chunk, di) fp32
+    b: jax.Array,  # (B, chunk, N) fp32
+    c: jax.Array,  # (B, chunk, N) fp32
+    a: jax.Array,  # (di, N) fp32
+    h0: jax.Array,  # (B, di, N) fp32
+    *,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+):
+    """Returns (y (B, chunk, di) fp32, h_last (B, di, N) fp32)."""
+    B, chunk, di = x.shape
+    N = b.shape[-1]
+    block_d = min(block_d, di)
+    assert di % block_d == 0, (di, block_d)
+    nd = di // block_d
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, nd),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d: (b_, 0, d)),
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d: (b_, 0, d)),
+            pl.BlockSpec((1, chunk, N), lambda b_, d: (b_, 0, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b_, d: (b_, 0, 0)),
+            pl.BlockSpec((block_d, N), lambda b_, d: (d, 0)),
+            pl.BlockSpec((1, block_d, N), lambda b_, d: (b_, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d: (b_, 0, d)),
+            pl.BlockSpec((1, block_d, N), lambda b_, d: (b_, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, chunk, di), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, b, c, a, h0)
+    return y, h_last

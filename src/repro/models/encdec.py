@@ -1,0 +1,196 @@
+"""Encoder-decoder transformer backbone (seamless-m4t-medium).
+
+The multimodal frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, enc_len, d_model).  The backbone is
+a bidirectional encoder + causal decoder with cross-attention.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import apply_rope, embed_tokens, rms_norm, scan_layers, scan_layers_carry, swiglu
+from repro.models.spec import ParamSpec, dense, stacked
+from repro.models.transformer import _head, attn_specs, mlp_specs, write_cache
+from repro.parallel.sharding import shard_x
+
+
+def enc_block_specs(cfg: ArchConfig, dt: str) -> dict:
+    return {
+        "ln_attn": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "attn": attn_specs(cfg, dt),
+        "ln_mlp": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "mlp": mlp_specs(cfg, dt),
+    }
+
+
+def dec_block_specs(cfg: ArchConfig, dt: str) -> dict:
+    return {
+        "ln_attn": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "attn": attn_specs(cfg, dt),
+        "ln_cross": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "cross": attn_specs(cfg, dt),
+        "ln_mlp": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "mlp": mlp_specs(cfg, dt),
+    }
+
+
+def specs(cfg: ArchConfig) -> dict:
+    dt = cfg.param_dtype
+    return {
+        "embed": dense((cfg.vocab_size, cfg.d_model), ("vocab", "embed_table"), dt, scale=0.02),
+        "enc_blocks": stacked(cfg.n_enc_layers, enc_block_specs(cfg, dt)),
+        "enc_ln_f": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "dec_blocks": stacked(cfg.n_layers, dec_block_specs(cfg, dt)),
+        "ln_f": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "lm_head": dense((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ArchConfig, params, frames: jax.Array) -> jax.Array:
+    """frames (B, Le, D) stub embeddings -> encoder output (B, Le, D)."""
+    x = frames.astype(cfg.compute_dtype)
+    x = shard_x(x, "batch", "seq", "embed_act")
+    Le = x.shape[1]
+    pos = jnp.arange(Le)[None, :]
+
+    def body(c, p):
+        h = rms_norm(c, p["ln_attn"], cfg.norm_eps)
+        q, k, v = attn.qkv_proj(h, p["attn"])
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        a = attn.attention(q, k, v, causal=False)
+        c = c + attn.out_proj(a, p["attn"]["wo"])
+        h = rms_norm(c, p["ln_mlp"], cfg.norm_eps)
+        c = c + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+        return shard_x(c, "batch", "seq", "embed_act")
+
+    x = scan_layers(body, x, params["enc_blocks"], remat=cfg.remat)
+    return rms_norm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _cross_attn(cfg, x, p, enc_out):
+    h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+    q = jnp.einsum("bld,dhk->blhk", h, p["cross"]["wq"])
+    k = jnp.einsum("bld,dhk->blhk", enc_out, p["cross"]["wk"])
+    v = jnp.einsum("bld,dhk->blhk", enc_out, p["cross"]["wv"])
+    a = attn.attention(q, k, v, causal=False)
+    return x + attn.out_proj(a, p["cross"]["wo"])
+
+
+def _cross_attn_cached(cfg, x, p, ck, cv):
+    """Decode-time cross attention against precomputed encoder K/V."""
+    h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+    q = jnp.einsum("bld,dhk->blhk", h, p["cross"]["wq"])
+    Le = ck.shape[1]
+    pos_full = jnp.full((x.shape[0],), Le - 1, jnp.int32)  # all enc positions valid
+    a = attn.decode_attention(q, ck, cv, pos_full)
+    return x + attn.out_proj(a, p["cross"]["wo"])
+
+
+def dec_block(cfg, x, p, pos, enc_out):
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    q, k, v = attn.qkv_proj(h, p["attn"])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    a = attn.attention(q, k, v, causal=True)
+    x = x + attn.out_proj(a, p["attn"]["wo"])
+    x = _cross_attn(cfg, x, p, enc_out)
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return shard_x(x, "batch", "seq", "embed_act"), (k, v)
+
+
+def backbone(cfg: ArchConfig, params, tokens, extras=None):
+    """Decoder hidden states: extras["enc_frames"] (B, Le, D) stub embeddings."""
+    enc_out = encode(cfg, params, extras["enc_frames"])
+    B, L = tokens.shape
+    x = embed_tokens(tokens, params["embed"], cfg.compute_dtype)
+    pos = jnp.arange(L)[None, :]
+    return scan_layers(
+        lambda c, p: dec_block(cfg, c, p, pos, enc_out)[0],
+        x,
+        params["dec_blocks"],
+        remat=cfg.remat,
+    )
+
+
+def forward(cfg: ArchConfig, params, tokens, extras=None):
+    return _head(cfg, params, backbone(cfg, params, tokens, extras))
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    KV, hd, L, Le = cfg.n_kv_heads, cfg.hd, cfg.n_layers, cfg.enc_len_serve
+    ct = cfg.compute_dtype
+    ax = ("layers", "cache_batch", "cache_seq", "kv_heads_act", None)
+    return {
+        "layers": {
+            "k": ParamSpec((L, batch, cache_len, KV, hd), ax, ct, "zeros"),
+            "v": ParamSpec((L, batch, cache_len, KV, hd), ax, ct, "zeros"),
+            "cross_k": ParamSpec((L, batch, Le, KV, hd), ax, ct, "zeros"),
+            "cross_v": ParamSpec((L, batch, Le, KV, hd), ax, ct, "zeros"),
+        }
+    }
+
+
+def prefill(cfg: ArchConfig, params, tokens, extras=None, cache_len: Optional[int] = None):
+    enc_out = encode(cfg, params, extras["enc_frames"])
+    B, L = tokens.shape
+    cache_len = cache_len or L
+    x = embed_tokens(tokens, params["embed"], cfg.compute_dtype)
+    pos = jnp.arange(L)[None, :]
+
+    def body(c, p):
+        c, (k, v) = dec_block(cfg, c, p, pos, enc_out)
+        xk = jnp.einsum("bld,dhk->blhk", enc_out, p["cross"]["wk"])
+        xv = jnp.einsum("bld,dhk->blhk", enc_out, p["cross"]["wv"])
+        return c, (k, v, xk, xv)
+
+    x, (k, v, xk, xv) = scan_layers_carry(body, x, params["dec_blocks"], remat=cfg.remat)
+    if cache_len > L:
+        padw = ((0, 0), (0, 0), (0, cache_len - L), (0, 0), (0, 0))
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+    cache = {"layers": {"k": k, "v": v, "cross_k": xk, "cross_v": xv}}
+    return _head(cfg, params, x[:, -1:, :]), cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos, extras=None):
+    x = embed_tokens(tokens, params["embed"], cfg.compute_dtype)
+
+    def body(c, scanned):
+        p, lc = scanned
+        h = rms_norm(c, p["ln_attn"], cfg.norm_eps)
+        q, k_t, v_t = attn.qkv_proj(h, p["attn"])
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_t = apply_rope(k_t, pos[:, None], cfg.rope_theta)
+        ck, cv = write_cache(lc["k"], lc["v"], k_t, v_t, pos)
+        a = attn.decode_attention(q, ck, cv, pos)
+        c = c + attn.out_proj(a, p["attn"]["wo"])
+        c = _cross_attn_cached(cfg, c, p, lc["cross_k"], lc["cross_v"])
+        h = rms_norm(c, p["ln_mlp"], cfg.norm_eps)
+        c = c + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+        return c, {"k": ck, "v": cv, "cross_k": lc["cross_k"], "cross_v": lc["cross_v"]}
+
+    x, new_layers = scan_layers_carry(
+        body, x, (params["dec_blocks"], cache["layers"]), remat="none"
+    )
+    return _head(cfg, params, x), {"layers": new_layers}

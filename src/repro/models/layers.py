@@ -1,0 +1,165 @@
+"""Core layer primitives shared by every model family (pure JAX)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard_x
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g) * u
+    h = shard_x(h, "batch", "seq", "mlp_act")
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def geglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.gelu(g) * u
+    h = shard_x(h, "batch", "seq", "mlp_act")
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def embed_tokens(tokens: jax.Array, table: jax.Array, compute_dtype) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0).astype(compute_dtype)
+    return shard_x(out, "batch", "seq", "embed_act")
+
+
+def lm_logits(x: jax.Array, head: jax.Array) -> jax.Array:
+    """x (..., D) @ head (D, V) -> (..., V)."""
+    logits = jnp.einsum("...d,dv->...v", x, head)
+    return shard_x(logits, "batch", "seq", "vocab_act")
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over the seq dim.  x (B, L, C), w (C, K)."""
+    k = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # gather K shifted views and contract - small K (4), stays fused.
+    out = jnp.zeros_like(x)
+    L = x.shape[1]
+    for i in range(k):
+        out = out + pad[:, i : i + L, :] * w[:, i]
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array, bias=None):
+    """One decode step of causal depthwise conv.
+    x_t (B, C); conv_state (B, K-1, C) holds the previous K-1 inputs."""
+    k = w.shape[-1]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,ck->bc", window, w)
+    if bias is not None:
+        out = out + bias
+    new_state = window[:, 1:, :]
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x (..., L, n_heads, head_dim) (or L==1 decode), pos broadcastable (..., L)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (..., L, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., L, 1, hd/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scan-over-layers helper
+# ---------------------------------------------------------------------------
+
+# Cost-extrapolation mode (dry-run only): XLA's cost_analysis counts a while
+# loop's body ONCE regardless of trip count, so the dry-run lowers small-depth
+# variants with every scan fully unrolled and extrapolates F = alpha + L*beta.
+_UNROLL = {"on": False}
+
+
+class unroll_all_scans:
+    """Context manager: every scan_layers / attention / ssm chunk scan lowers
+    fully unrolled (trace-time flag; never use for real execution)."""
+
+    def __enter__(self):
+        _UNROLL["on"] = True
+        return self
+
+    def __exit__(self, *exc):
+        _UNROLL["on"] = False
+        return False
+
+
+def scan_unroll() -> bool:
+    return _UNROLL["on"]
+
+
+def remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "collectives":
+        # §Perf: save exactly the post-all-reduce activations (named below),
+        # so the backward pass re-runs the cheap elementwise/matmul work but
+        # never re-issues TP collectives (remat="dots"/"full" re-run them).
+        return jax.checkpoint_policies.save_only_these_names("post_collective")
+    raise ValueError(name)
+
+
+def post_collective(x: jax.Array) -> jax.Array:
+    """Tag an activation produced right after a TP collective (see
+    remat_policy('collectives'))."""
+    from jax.ad_checkpoint import checkpoint_name
+
+    return checkpoint_name(x, "post_collective")
+
+
+def scan_layers(body, carry, stacked_params, remat: str = "dots", **static_kw):
+    """Run ``body(carry, layer_params) -> carry`` over a stacked param tree.
+
+    The body is rematerialized per-layer according to the policy so that the
+    backward pass does not keep every layer's activations live.
+    """
+    fn = lambda c, p: (body(c, p, **static_kw), None)
+    policy = remat_policy(remat)
+    if policy is not None or remat == "full":
+        fn = jax.checkpoint(fn, policy=policy, prevent_cse=False)
+    carry, _ = jax.lax.scan(fn, carry, stacked_params, unroll=_UNROLL["on"])
+    return carry
+
+
+def scan_layers_carry(body, carry, stacked_params, remat: str = "dots", **static_kw):
+    """Like scan_layers but the body also emits a per-layer output
+    (used for cache/state collection): body(carry, p) -> (carry, out)."""
+    fn = lambda c, p: body(c, p, **static_kw)
+    policy = remat_policy(remat)
+    if policy is not None or remat == "full":
+        fn = jax.checkpoint(fn, policy=policy, prevent_cse=False)
+    return jax.lax.scan(fn, carry, stacked_params, unroll=_UNROLL["on"])

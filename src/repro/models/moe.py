@@ -1,0 +1,233 @@
+"""Mixture-of-Experts FFN with capacity-based grouped dispatch (Switch/MaxText
+style) + optional parallel dense residual (arctic).
+
+Tokens are processed in groups of ``moe_group_size``; each group computes a
+local top-k dispatch with capacity C = ceil(g * k * cf / E).  Expert weights
+are stacked (E, D, F) and sharded over the "model" axis when E divides the
+axis (EP, arctic) or expert-internally (grok, 8 experts on a 16-way axis).
+The dispatch einsums keep cost linear in tokens (quadratic only in the small
+group size).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import apply_rope, embed_tokens, rms_norm, scan_layers, scan_layers_carry, swiglu
+from repro.models.spec import ParamSpec, dense, stacked
+from repro.models.transformer import (
+    _head,
+    attn_specs,
+    cache_specs as dense_cache_specs,
+    self_attn_block_decode,
+    write_cache,
+)
+from repro.parallel.sharding import shard_x
+
+AUX_LOSS_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ArchConfig, dt: str) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    tree = {
+        "router": dense((D, E), ("embed", None), dt, scale=0.02),
+        "w_gate": dense((E, D, F), ("experts", "embed", "mlp"), dt),
+        "w_up": dense((E, D, F), ("experts", "embed", "mlp"), dt),
+        "w_down": dense((E, F, D), ("experts", "mlp", "embed"), dt),
+    }
+    if cfg.moe_dense_residual:
+        tree["dense"] = {
+            "w_gate": dense((D, F), ("embed", "mlp"), dt),
+            "w_up": dense((D, F), ("embed", "mlp"), dt),
+            "w_down": dense((F, D), ("mlp", "embed"), dt),
+        }
+    return tree
+
+
+def block_specs(cfg: ArchConfig, dt: str) -> dict:
+    return {
+        "ln_attn": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "attn": attn_specs(cfg, dt),
+        "ln_mlp": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "moe": moe_specs(cfg, dt),
+    }
+
+
+def specs(cfg: ArchConfig) -> dict:
+    dt = cfg.param_dtype
+    return {
+        "embed": dense((cfg.vocab_size, cfg.d_model), ("vocab", "embed_table"), dt, scale=0.02),
+        "blocks": stacked(cfg.n_layers, block_specs(cfg, dt)),
+        "ln_f": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "lm_head": dense((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def capacity(cfg: ArchConfig, group: int) -> int:
+    return max(1, math.ceil(group * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+
+
+def route(cfg: ArchConfig, logits: jax.Array):
+    """logits (G, g, E) -> (dispatch (G,g,E,C) bool-ish, combine (G,g,E,C), aux, z).
+
+    First-choice slots get capacity priority over second choices (Switch).
+    """
+    G, g, E = logits.shape
+    C = capacity(cfg, g)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_v, top_i = jax.lax.top_k(probs, cfg.top_k)  # (G, g, k)
+    top_v = top_v / jnp.maximum(jnp.sum(top_v, -1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (G, g, k, E)
+    # priority order: all 1st choices before any 2nd choice within the group
+    oh = onehot.swapaxes(1, 2).reshape(G, cfg.top_k * g, E)
+    pos = jnp.cumsum(oh, axis=1) - oh  # position of each request in its expert queue
+    keep = (pos < C).astype(jnp.float32) * oh
+    slot = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]  # (G, k*g, E, C)
+    slot = slot.reshape(G, cfg.top_k, g, E, C).swapaxes(1, 2)  # (G, g, k, E, C)
+    dispatch = jnp.sum(slot, axis=2)  # (G, g, E, C)
+    combine = jnp.sum(slot * top_v[..., None, None], axis=2)  # (G, g, E, C)
+
+    # load-balancing aux loss (Switch): E * mean_e(frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(onehot[:, :, 0, :], axis=1)  # first-choice fraction (G, E)
+    mean_p = jnp.mean(probs, axis=1)  # (G, E)
+    aux = E * jnp.mean(jnp.sum(frac * mean_p, axis=-1))
+    z = jnp.mean(jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1) ** 2)
+    return dispatch, combine, aux, z
+
+
+def moe_ffn(cfg: ArchConfig, x: jax.Array, p: dict):
+    """x (B, L, D) -> (y (B, L, D), aux_metrics dict)."""
+    B, L, D = x.shape
+    T = B * L
+    g = min(cfg.moe_group_size, T)
+    while T % g:  # fall back to the largest divisor of T (odd test lengths)
+        g -= 1
+    G = T // g
+    xg = x.reshape(G, g, D)
+    xg = shard_x(xg, "group_act", None, None)
+
+    logits = jnp.einsum("Ggd,de->Gge", xg, p["router"].astype(jnp.float32))
+    dispatch, combine, aux, z = route(cfg, logits)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(jnp.float32)
+
+    xe = jnp.einsum("Ggd,Ggec->Gecd", xg, dispatch)  # (G, E, C, D)
+    xe = shard_x(xe, "group_act", "experts_act", None, None)
+    h = jax.nn.silu(jnp.einsum("Gecd,edf->Gecf", xe, p["w_gate"])) * jnp.einsum(
+        "Gecd,edf->Gecf", xe, p["w_up"]
+    )
+    h = shard_x(h, "group_act", "experts_act", None, "mlp_act")
+    ye = jnp.einsum("Gecf,efd->Gecd", h, p["w_down"])  # (G, E, C, D)
+    y = jnp.einsum("Gecd,Ggec->Ggd", ye.astype(jnp.float32), combine)
+    y = y.reshape(B, L, D).astype(x.dtype)
+    if "dense" in p:  # arctic: parallel dense residual MLP
+        y = y + swiglu(x, p["dense"]["w_gate"], p["dense"]["w_up"], p["dense"]["w_down"])
+    return shard_x(y, "batch", "seq", "embed_act"), {"aux_loss": aux, "z_loss": z}
+
+
+# ---------------------------------------------------------------------------
+# Blocks / model passes
+# ---------------------------------------------------------------------------
+
+
+def moe_block(cfg: ArchConfig, x, p, pos):
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    q, k, v = attn.qkv_proj(h, p["attn"])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    a = attn.attention(q, k, v, causal=True)
+    x = x + attn.out_proj(a, p["attn"]["wo"])
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    y, aux = moe_ffn(cfg, h, p["moe"])
+    return x + y, aux
+
+
+def forward(cfg: ArchConfig, params, tokens, extras=None):
+    """Returns (logits, moe_metrics)."""
+    B, L = tokens.shape
+    x = embed_tokens(tokens, params["embed"], cfg.compute_dtype)
+    pos = jnp.arange(L)[None, :]
+
+    def body(carry, p):
+        x, aux_sum, z_sum = carry
+        x, aux = moe_block(cfg, x, p, pos)
+        return (x, aux_sum + aux["aux_loss"], z_sum + aux["z_loss"]), None
+
+    (x, aux_sum, z_sum) = scan_layers(
+        lambda c, p: body(c, p)[0], (x, 0.0, 0.0), params["blocks"], remat=cfg.remat
+    )
+    logits = _head(cfg, params, x)
+    n = cfg.n_layers
+    return logits, {"aux_loss": aux_sum / n, "z_loss": z_sum / n}
+
+
+def aux_loss(metrics: dict) -> jax.Array:
+    return AUX_LOSS_WEIGHT * metrics["aux_loss"] + Z_LOSS_WEIGHT * metrics["z_loss"]
+
+
+cache_specs = dense_cache_specs
+
+
+def _decode_block(cfg, x, p, layer_cache, pos):
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    q, k_t, v_t = attn.qkv_proj(h, p["attn"])
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_t = apply_rope(k_t, pos[:, None], cfg.rope_theta)
+    ck, cv = write_cache(layer_cache["k"], layer_cache["v"], k_t, v_t, pos)
+    a = attn.decode_attention(q, ck, cv, pos)
+    x = x + attn.out_proj(a, p["attn"]["wo"])
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    y, _ = moe_ffn(cfg, h, p["moe"])
+    return x + y, {"k": ck, "v": cv}
+
+
+def prefill(cfg: ArchConfig, params, tokens, extras=None, cache_len=None):
+    B, L = tokens.shape
+    cache_len = cache_len or L
+    x = embed_tokens(tokens, params["embed"], cfg.compute_dtype)
+    pos = jnp.arange(L)[None, :]
+
+    def body(c, p):
+        h = rms_norm(c, p["ln_attn"], cfg.norm_eps)
+        q, k, v = attn.qkv_proj(h, p["attn"])
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        a = attn.attention(q, k, v, causal=True)
+        c = c + attn.out_proj(a, p["attn"]["wo"])
+        h = rms_norm(c, p["ln_mlp"], cfg.norm_eps)
+        y, _ = moe_ffn(cfg, h, p["moe"])
+        return c + y, (k, v)
+
+    x, (k, v) = scan_layers_carry(body, x, params["blocks"], remat=cfg.remat)
+    if cache_len > L:
+        padw = ((0, 0), (0, 0), (0, cache_len - L), (0, 0), (0, 0))
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+    return _head(cfg, params, x[:, -1:, :]), {"layers": {"k": k, "v": v}}
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos, extras=None):
+    x = embed_tokens(tokens, params["embed"], cfg.compute_dtype)
+    x, new_cache = scan_layers_carry(
+        lambda c, scanned: _decode_block(cfg, c, scanned[0], scanned[1], pos),
+        x,
+        (params["blocks"], cache["layers"]),
+        remat="none",
+    )
+    return _head(cfg, params, x), {"layers": new_cache}

@@ -1,0 +1,207 @@
+"""Dense decoder-only GQA transformer (llama3 / internlm2 / granite family).
+
+Layer stacking uses ``lax.scan`` over stacked parameters so the lowered HLO is
+O(1) in depth (critical for 126-layer 405B dry-run compile times on CPU).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_rope,
+    embed_tokens,
+    lm_logits,
+    rms_norm,
+    scan_layers,
+    scan_layers_carry,
+    swiglu,
+)
+from repro.models.spec import ParamSpec, dense, stacked
+from repro.parallel.sharding import shard_x
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ArchConfig, dt: str) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": dense((D, H, hd), ("embed", "heads", None), dt),
+        "wk": dense((D, KV, hd), ("embed", "kv_heads", None), dt),
+        "wv": dense((D, KV, hd), ("embed", "kv_heads", None), dt),
+        "wo": dense((H, hd, D), ("heads", None, "embed"), dt),
+    }
+
+
+def mlp_specs(cfg: ArchConfig, dt: str) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": dense((D, F), ("embed", "mlp"), dt),
+        "w_up": dense((D, F), ("embed", "mlp"), dt),
+        "w_down": dense((F, D), ("mlp", "embed"), dt),
+    }
+
+
+def block_specs(cfg: ArchConfig, dt: str) -> dict:
+    return {
+        "ln_attn": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "attn": attn_specs(cfg, dt),
+        "ln_mlp": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+        "mlp": mlp_specs(cfg, dt),
+    }
+
+
+def specs(cfg: ArchConfig) -> dict:
+    dt = cfg.param_dtype
+    tree: dict[str, Any] = {
+        "embed": dense((cfg.vocab_size, cfg.d_model), ("vocab", "embed_table"), dt, scale=0.02),
+        "blocks": stacked(cfg.n_layers, block_specs(cfg, dt)),
+        "ln_f": ParamSpec((cfg.d_model,), ("norm",), dt, "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = dense((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dt)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def self_attn_block(cfg: ArchConfig, x, p, pos, *, window=None):
+    from repro.models.layers import post_collective
+
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    q, k, v = attn.qkv_proj(h, p["attn"])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    a = attn.attention(q, k, v, causal=True, window=window)
+    x = x + post_collective(attn.out_proj(a, p["attn"]["wo"]))
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    x = x + post_collective(swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"]))
+    return shard_x(x, "batch", "seq", "embed_act")
+
+
+def self_attn_block_prefill(cfg: ArchConfig, x, p, pos, *, window=None):
+    """Like self_attn_block but also emits the (k, v) cache for this layer."""
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    q, k, v = attn.qkv_proj(h, p["attn"])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    a = attn.attention(q, k, v, causal=True, window=window)
+    x = x + attn.out_proj(a, p["attn"]["wo"])
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return shard_x(x, "batch", "seq", "embed_act"), (k, v)
+
+
+def write_cache(cache_k, cache_v, k_t, v_t, pos):
+    """Write one token's k/v into the cache at per-batch positions."""
+
+    def upd(c, t, p):
+        return jax.lax.dynamic_update_slice(c, t, (p, 0, 0))
+
+    cache_k = jax.vmap(upd)(cache_k, k_t, pos)
+    cache_v = jax.vmap(upd)(cache_v, v_t, pos)
+    return cache_k, cache_v
+
+
+def self_attn_block_decode(cfg: ArchConfig, x, p, layer_cache, pos, *, window=None, cache_positions=None):
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    q, k_t, v_t = attn.qkv_proj(h, p["attn"])
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_t = apply_rope(k_t, pos[:, None], cfg.rope_theta)
+    write_pos = pos if window is None else pos % layer_cache["k"].shape[1]
+    ck, cv = write_cache(layer_cache["k"], layer_cache["v"], k_t, v_t, write_pos)
+    cpos = cache_positions
+    a = attn.decode_attention(q, ck, cv, pos, cache_positions=cpos, window=window)
+    x = x + attn.out_proj(a, p["attn"]["wo"])
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Full model passes
+# ---------------------------------------------------------------------------
+
+
+def _head(cfg: ArchConfig, params, x):
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return lm_logits(x, head.astype(x.dtype))
+
+
+def backbone(cfg: ArchConfig, params, tokens, extras=None):
+    """Hidden states before the LM head (used by the chunked-CE path)."""
+    B, L = tokens.shape
+    x = embed_tokens(tokens, params["embed"], cfg.compute_dtype)
+    pos = jnp.arange(L)[None, :]
+    return scan_layers(
+        lambda c, p: self_attn_block(cfg, c, p, pos),
+        x,
+        params["blocks"],
+        remat=cfg.remat,
+    )
+
+
+def forward(cfg: ArchConfig, params, tokens, extras=None):
+    """Teacher-forced full-sequence forward -> logits (B, L, V)."""
+    return _head(cfg, params, backbone(cfg, params, tokens, extras))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    KV, hd, L = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    dt = cfg.compute_dtype
+    return {
+        "layers": {
+            "k": ParamSpec((L, batch, cache_len, KV, hd), ("layers", "cache_batch", "cache_seq", "kv_heads_act", None), dt, "zeros"),
+            "v": ParamSpec((L, batch, cache_len, KV, hd), ("layers", "cache_batch", "cache_seq", "kv_heads_act", None), dt, "zeros"),
+        }
+    }
+
+
+def prefill(cfg: ArchConfig, params, tokens, extras=None, cache_len: Optional[int] = None):
+    """Full-sequence forward that also returns the KV cache.
+
+    Returns (last-token logits (B, 1, V), cache).
+    """
+    B, L = tokens.shape
+    cache_len = cache_len or L
+    x = embed_tokens(tokens, params["embed"], cfg.compute_dtype)
+    pos = jnp.arange(L)[None, :]
+    x, kv = scan_layers_carry(
+        lambda c, p: self_attn_block_prefill(cfg, c, p, pos),
+        x,
+        params["blocks"],
+        remat=cfg.remat,
+    )
+    k, v = kv  # (n_layers, B, L, KV, hd)
+    if cache_len > L:
+        padw = ((0, 0), (0, 0), (0, cache_len - L), (0, 0), (0, 0))
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+    logits = _head(cfg, params, x[:, -1:, :])
+    return logits, {"layers": {"k": k, "v": v}}
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos, extras=None):
+    """One decode step.  tokens (B, 1), pos (B,).  Returns (logits, cache)."""
+    x = embed_tokens(tokens, params["embed"], cfg.compute_dtype)
+
+    def body(c, scanned):
+        p, layer_cache = scanned
+        return self_attn_block_decode(cfg, c, p, layer_cache, pos)
+
+    x, new_cache = scan_layers_carry(
+        body, x, (params["blocks"], cache["layers"]), remat="none"
+    )
+    return _head(cfg, params, x), {"layers": new_cache}

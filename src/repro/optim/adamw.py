@@ -1,0 +1,140 @@
+"""AdamW with fp32 state over bf16 params, global-norm clipping, and
+ZeRO-1-style optimizer-state sharding (state pspecs shard the first
+replicated dim of every param over "data").
+
+No optax dependency - the update is a hand-rolled pytree map so the optimizer
+state sharding stays fully under our control for the dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamSpec, is_spec_leaf
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.peak_lr * warm * frac
+
+
+def init_state(params) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer-state sharding specs
+# ---------------------------------------------------------------------------
+
+
+def opt_state_specs(param_specs) -> dict:
+    """Spec tree for (m, v): same shapes as params, fp32, same logical axes.
+
+    The ZeRO trick happens at PartitionSpec resolution: see zero1_pspec.
+    """
+    f32 = lambda s: ParamSpec(s.shape, s.axes, "float32", "zeros")
+    return {
+        "m": jax.tree.map(f32, param_specs, is_leaf=is_spec_leaf),
+        "v": jax.tree.map(f32, param_specs, is_leaf=is_spec_leaf),
+        "step": ParamSpec((), (), "int32", "zeros"),
+    }
+
+
+def zero1_pspec(param_pspec, shape, data_size: int) -> "jax.sharding.PartitionSpec":
+    """Extend a param's PartitionSpec with 'data' on its largest unsharded,
+    divisible dim.  This shards m/v over the data axis even when the param
+    itself is only tensor-parallel - ZeRO-1.  Falls back to the param's own
+    sharding when no dim divides (tiny tensors: norm scales, gates)."""
+    from jax.sharding import PartitionSpec as P
+
+    spec = list(param_pspec) + [None] * (len(shape) - len(param_pspec))
+    used = {a for s in spec if s for a in ((s,) if isinstance(s, str) else s)}
+    if "data" in used or not shape:
+        return P(*spec)
+    candidates = [
+        i for i, s in enumerate(spec) if s is None and shape[i] % data_size == 0
+    ]
+    if not candidates:
+        return P(*spec)
+    i = max(candidates, key=lambda i: shape[i])
+    spec[i] = "data"
+    return P(*spec)
+
+
+def opt_pspec_tree(param_specs, param_pspecs, zero1: bool, data_size: int = 1):
+    """PartitionSpecs for the optimizer state tree."""
+    from jax.sharding import PartitionSpec as P
+
+    def one(spec: ParamSpec, pspec):
+        return zero1_pspec(pspec, spec.shape, data_size) if zero1 else pspec
+
+    m = jax.tree.map(one, param_specs, param_pspecs, is_leaf=is_spec_leaf)
+    return {"m": m, "v": jax.tree.map(lambda x: x, m), "step": P()}

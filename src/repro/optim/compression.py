@@ -1,0 +1,103 @@
+"""Gradient compression for the data-parallel reduction (1-bit-Adam family).
+
+Two-phase int8 all-reduce with error feedback, built from explicit
+collectives inside ``shard_map``:
+
+  phase 1 (reduce-scatter): each DP shard block-quantizes (grad + worker
+    error) to int8 with per-block fp32 scales and ``all_to_all``s the int8
+    payload so each shard owns 1/n of the blocks.  Wire: 1 byte/elem + 1.6%
+    scales (vs 2 bytes for a bf16 ring RS).
+  phase 2 (all-gather): the owner sums its received contributions in fp32,
+    re-quantizes the SUM to int8 (owner error feedback), and ``all_gather``s
+    the int8 payload + scales.  Wire: 1 byte/elem.
+
+Total wire ~2.06 bytes/elem vs 4 (bf16 all-reduce) / 8 (fp32) - the knob that
+shrinks the cross-pod ("pod"-axis DCI) collective term in §Roofline.  Both
+quantization errors are carried into the next step (error feedback), which
+keeps the compressed SGD/Adam iteration convergent (Karimireddy et al. 2019).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _n_blocks(size: int, n_dev: int) -> int:
+    nb = -(-size // BLOCK)
+    return -(-nb // n_dev) * n_dev  # pad so every shard owns nb/n_dev blocks
+
+
+def _to_blocks(x: jax.Array, n_dev: int) -> jax.Array:
+    nb = _n_blocks(x.size, n_dev)
+    flat = jnp.zeros((nb * BLOCK,), jnp.float32).at[: x.size].set(
+        x.astype(jnp.float32).reshape(-1)
+    )
+    return flat.reshape(nb, BLOCK)
+
+
+def _quant(blocks: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def _dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def compression_state(param_shapes, n_dev: int):
+    """(worker_err, owner_err) zero states for one param of given shape."""
+
+    def one(shape):
+        size = math.prod(shape) if shape else 1
+        nb = _n_blocks(size, n_dev)
+        return {
+            "worker_err": jnp.zeros(shape, jnp.float32),
+            "owner_err": jnp.zeros((nb // n_dev, BLOCK), jnp.float32),
+        }
+
+    return jax.tree.map(lambda p: one(p.shape), param_shapes)
+
+
+def compressed_mean(x: jax.Array, state: dict, axis_name) -> tuple[jax.Array, dict]:
+    """Error-feedback int8 mean-all-reduce over ``axis_name`` (inside shard_map).
+
+    x: this shard's local gradient (full param shape - DP replicates params).
+    Returns (mean over shards, new compression state).
+    """
+    n = jax.lax.psum(1, axis_name)
+    blocks = _to_blocks(x, n)  # (nb, BLOCK)
+    nb = blocks.shape[0]
+    # add worker error feedback (same padded layout)
+    blocks = blocks + _to_blocks(state["worker_err"], n)
+
+    q, scale = _quant(blocks)
+    worker_err = blocks - _dequant(q, scale)  # residual kept locally
+
+    # --- phase 1: all_to_all the int8 payload; shard i receives every peer's
+    # contribution for its owned block range.
+    owned = nb // n
+    q_recv = jax.lax.all_to_all(q.reshape(n, owned, BLOCK), axis_name, 0, 0, tiled=True)
+    s_recv = jax.lax.all_to_all(scale.reshape(n, owned), axis_name, 0, 0, tiled=True)
+    # (n*owned, BLOCK): n contributions for my owned blocks
+    contrib = _dequant(q_recv.reshape(n, owned, BLOCK), s_recv.reshape(n, owned))
+    total = jnp.sum(contrib, axis=0) + state["owner_err"]  # (owned, BLOCK)
+
+    q2, scale2 = _quant(total)
+    owner_err = total - _dequant(q2, scale2)
+
+    # --- phase 2: all_gather int8 sums + scales, reconstruct the full mean.
+    q_all = jax.lax.all_gather(q2, axis_name, axis=0, tiled=True)  # (nb, BLOCK)
+    s_all = jax.lax.all_gather(scale2, axis_name, axis=0, tiled=True)  # (nb,)
+    mean = (_dequant(q_all, s_all) / n).reshape(-1)[: x.size].reshape(x.shape)
+
+    new_state = {
+        "worker_err": worker_err.reshape(-1)[: x.size].reshape(x.shape),
+        "owner_err": owner_err,
+    }
+    return mean.astype(x.dtype), new_state

@@ -1,0 +1,157 @@
+"""HLO parsing for the roofline's collective term.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we parse the
+post-optimization HLO text and sum the operand/result sizes of every
+communication op.  SPMD modules are per-device, so the parsed sizes are
+per-chip bytes; the collective term is per_chip_bytes / link_bw, which equals
+the assignment's total_bytes / (chips * link_bw).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# result type(s) of an HLO instruction: "bf16[2,4096,512]{2,1,0}"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "  %name = <result-types> op-name(" with optional tuple result
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+("
+    + "|".join(COLLECTIVE_OPS)
+    + r")(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=lambda: defaultdict(int))
+    count_by_op: dict = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    def row(self) -> dict:
+        return {
+            "collective_bytes": self.total_bytes,
+            **{f"{k}_bytes": v for k, v in sorted(self.bytes_by_op.items())},
+            **{f"{k}_count": v for k, v in sorted(self.count_by_op.items())},
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-chip result sizes of every collective op in the module.
+
+    ``-start``/``-done`` async pairs are counted once (on the start op).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:  # async completion: already counted at -start
+            continue
+        result_types, op = m.group(1), m.group(2)
+        stats.bytes_by_op[op] += _shape_bytes(result_types)
+        stats.count_by_op[op] += 1
+    return stats
+
+
+def count_op(hlo_text: str, name: str) -> int:
+    pat = re.compile(r"=\s*[\w\[\]{},. ]*?\s" + re.escape(name) + r"\(")
+    return sum(1 for line in hlo_text.splitlines() if pat.search(line))
+
+
+# ---------------------------------------------------------------------------
+# Fusion-aware HBM traffic estimate
+# ---------------------------------------------------------------------------
+#
+# cost_analysis()['bytes accessed'] on the CPU backend counts every op's
+# operands unfused, inflating the memory term ~100x vs what a TPU (with
+# aggressive loop fusion) actually moves through HBM.  This parser estimates
+# HBM traffic by counting only materializing ops - dots, fusions, collectives,
+# slices/scatters, copies - and treating bare elementwise/reduce chains as
+# fused into their producers (free).  It is an *estimate*, reported alongside
+# the raw cost_analysis value in §Roofline.
+
+_MATERIALIZING = (
+    "dot", "fusion", "convolution", "copy", "transpose",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)\)")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+
+# slicing ops move only the sliced/updated region, not the whole source
+# (in-place on real hardware); counting full operands would punish unrolled
+# scans for every per-step xs slice.
+_SLICE_READS = ("slice", "dynamic-slice", "gather")
+_SLICE_WRITES = ("dynamic-update-slice", "scatter")
+
+
+def parse_hbm_traffic(hlo_text: str) -> int:
+    """Estimated HBM bytes moved: sum of (output + operand) bytes over
+    materializing ops only (loop bodies counted once, like cost_analysis -
+    use the same depth-extrapolation to fix trip counts).  Slice reads count
+    2x the slice size; slice updates count 2x the update size."""
+    shapes: dict[str, int] = {}
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, result_types, op, operands = m.groups()
+        out_bytes = _shape_bytes(result_types)
+        shapes[name] = out_bytes
+        base = op.rstrip("0123456789.")
+        if base.endswith("-start") or base.endswith("-done"):
+            base = base.rsplit("-", 1)[0]
+        if base not in _MATERIALIZING:
+            continue
+        if op.endswith("-done"):
+            continue  # async pair: counted at -start
+        arg_section = operands.split("), ")[0]
+        refs = _OPERAND_RE.findall(arg_section)
+        if base in _SLICE_READS:
+            total += 2 * out_bytes
+            continue
+        if base in _SLICE_WRITES:
+            upd_idx = 1 if base == "dynamic-update-slice" else 2
+            upd = shapes.get(refs[upd_idx], 0) if len(refs) > upd_idx else out_bytes
+            total += 2 * upd
+            continue
+        in_bytes = sum(shapes.get(ref, 0) for ref in refs)
+        total += out_bytes + in_bytes
+    return total

@@ -1,0 +1,134 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Hardware constants (TPU v5e target):
+    peak bf16 compute : 197 TFLOP/s per chip
+    HBM bandwidth     : 819 GB/s per chip
+    ICI link bandwidth: ~50 GB/s per link per chip
+
+Terms (seconds, per step):
+    compute    = HLO_FLOPs_per_chip / peak
+    memory     = HLO_bytes_per_chip / hbm_bw
+    collective = collective_bytes_per_chip / link_bw
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per train step
+(3x forward-only for serve steps); the ratio MODEL_FLOPS/HLO_FLOPs exposes
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops_total: float
+    hbm_bytes_est_per_chip: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / LINK_BW
+
+    @property
+    def t_memory_est(self) -> float:
+        """Fusion-aware HBM-traffic estimate (see roofline/hlo.py); the raw
+        cost_analysis bytes (t_memory) are an unfused upper bound on CPU."""
+        return self.hbm_bytes_est_per_chip / HBM_BW
+
+    @property
+    def bottleneck_est(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory_est,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_est(self) -> float:
+        return max(self.t_compute, self.t_memory_est, self.t_collective)
+
+    @property
+    def mfu_est(self) -> float:
+        """MODEL_FLOPS / (chips * peak * step_est): the roofline fraction with
+        the fusion-aware memory term."""
+        denom = self.n_chips * PEAK_FLOPS * self.step_time_est
+        return self.model_flops_total / denom if denom else 0.0
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """Perfect-overlap model: step >= max(terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs across all chips)."""
+        total_hlo = self.flops_per_chip * self.n_chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """MODEL_FLOPS / (chips * peak * step_lower_bound): the roofline
+        fraction achievable if the step ran exactly at its dominant term."""
+        denom = self.n_chips * PEAK_FLOPS * self.step_time_lower_bound
+        return self.model_flops_total / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.n_chips,
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "t_memory_est_s": round(self.t_memory_est, 6),
+            "bottleneck": self.bottleneck,
+            "bottleneck_est": self.bottleneck_est,
+            "model_flops": f"{self.model_flops_total:.3e}",
+            "hlo_flops_per_chip": f"{self.flops_per_chip:.3e}",
+            "useful_flops_frac": round(self.useful_flops_fraction, 4),
+            "mfu_upper_bound": round(self.mfu_upper_bound, 4),
+            "mfu_est": round(self.mfu_est, 4),
+        }
+
+
+def model_flops(arch, shape) -> float:
+    """6*N*D train / 2*N*D forward-only, with N = active params (MoE-aware)."""
+    n_active = arch.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

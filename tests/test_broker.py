@@ -1,0 +1,135 @@
+"""Broker integration: submission lifecycle, metrics, fault tolerance,
+elastic scaling, straggler mitigation, workflows."""
+import time
+
+import pytest
+
+from repro.core import Hydra, ProviderSpec, Task, TaskState, Workflow, WorkflowManager
+
+
+@pytest.fixture
+def broker(tmp_path):
+    h = Hydra(pod_store="memory", workdir=str(tmp_path), tasks_per_pod=16)
+    h.register_provider(ProviderSpec(name="jet2", concurrency=4))
+    h.register_provider(ProviderSpec(name="aws", concurrency=4))
+    h.register_provider(ProviderSpec(name="bridges2", platform="hpc", connector="pilot", concurrency=4))
+    yield h
+    h.shutdown(wait=False)
+
+
+def test_noop_workload_completes(broker):
+    tasks = [Task(kind="noop") for _ in range(200)]
+    sub = broker.submit(tasks)
+    assert sub.wait(timeout=60)
+    assert sub.states == {"DONE": 200}
+    m = sub.metrics()
+    assert m.ovh > 0 and m.th > 0 and m.n_pods > 0
+
+
+def test_scpp_vs_mcpp_pod_counts(broker):
+    t1 = [Task(kind="noop") for _ in range(64)]
+    sub1 = broker.submit(t1, partitioning="scpp")
+    sub1.wait(timeout=60)
+    assert sub1.metrics().n_pods == 64
+    t2 = [Task(kind="noop") for _ in range(64)]
+    sub2 = broker.submit(t2, partitioning="mcpp", tasks_per_pod=16)
+    sub2.wait(timeout=60)
+    assert sub2.metrics().n_pods <= 12  # 64/16 per bound provider group
+
+
+def test_callable_task_result(broker):
+    t = Task(kind="callable", fn=lambda: 7 * 6)
+    broker.submit([t]).wait(timeout=30)
+    assert t.result(timeout=5) == 42
+
+
+def test_failing_task_retries_then_succeeds(broker):
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    t = Task(kind="callable", fn=flaky, max_retries=3)
+    broker.submit([t]).wait(timeout=60)
+    assert t.result(timeout=10) == "ok"
+    assert calls["n"] == 3
+
+
+def test_exhausted_retries_fail_task(broker):
+    t = Task(kind="callable", fn=lambda: 1 / 0, max_retries=1)
+    broker.submit([t]).wait(timeout=60)
+    # give the retry path a moment to finish
+    deadline = time.time() + 10
+    while not t.done() and time.time() < deadline:
+        time.sleep(0.05)
+    with pytest.raises(ZeroDivisionError):
+        t.result(timeout=1)
+
+
+def test_provider_failure_rebinds_all_tasks(broker):
+    tasks = [Task(kind="sleep", duration=0.005) for _ in range(120)]
+    sub = broker.submit(tasks)
+    broker.manager("aws").fail()
+    assert sub.wait(timeout=120)
+    assert sub.states == {"DONE": 120}
+    assert not broker.proxy.get("aws").healthy
+
+
+def test_elastic_add_remove(broker):
+    tasks = [Task(kind="sleep", duration=0.004) for _ in range(150)]
+    sub = broker.submit(tasks)
+    broker.register_provider(ProviderSpec(name="azure", concurrency=8))
+    broker.remove_provider("jet2")
+    assert sub.wait(timeout=120)
+    assert sub.states == {"DONE": 150}
+    assert "jet2" not in broker.providers()
+    assert "azure" in broker.providers()
+
+
+def test_straggler_speculation(tmp_path):
+    h = Hydra(
+        pod_store="memory", workdir=str(tmp_path),
+        enable_straggler_mitigation=True, straggler_factor=3.0,
+    )
+    h.register_provider(ProviderSpec(name="fast", concurrency=8))
+    h.register_provider(ProviderSpec(name="slow", concurrency=2))
+    tasks = [Task(kind="sleep", duration=0.01) for _ in range(30)]
+    straggler = Task(kind="sleep", duration=8.0)
+    tasks.append(straggler)
+    t0 = time.perf_counter()
+    sub = h.submit(tasks)
+    assert sub.wait(timeout=30)
+    assert time.perf_counter() - t0 < 6.0  # beat the 8s straggler
+    h.shutdown(wait=False)
+
+
+def test_workflow_dag_ordering(broker):
+    order = []
+    wf = Workflow()
+    a = wf.add(Task(kind="callable", fn=lambda: order.append("a")))
+    b = wf.add(Task(kind="callable", fn=lambda: order.append("b")), deps=[a])
+    c = wf.add(Task(kind="callable", fn=lambda: order.append("c")), deps=[a])
+    d = wf.add(Task(kind="callable", fn=lambda: order.append("d")), deps=[b, c])
+    WorkflowManager(broker).run([wf])
+    assert wf.done and not wf.failed
+    assert order[0] == "a" and order[-1] == "d"
+
+
+def test_workflow_failure_cancels_downstream(broker):
+    wf = Workflow()
+    a = wf.add(Task(kind="callable", fn=lambda: 1 / 0, max_retries=0))
+    b = wf.add(Task(kind="noop"), deps=[a])
+    WorkflowManager(broker).run([wf])
+    assert wf.failed
+    assert b.tstate == TaskState.CANCELED
+
+
+def test_graceful_shutdown_idempotent(tmp_path):
+    h = Hydra(pod_store="memory", workdir=str(tmp_path))
+    h.register_provider(ProviderSpec(name="a"))
+    h.submit([Task(kind="noop") for _ in range(10)]).wait(timeout=30)
+    h.shutdown()
+    h.shutdown(wait=False)  # second call must not raise

@@ -1,0 +1,56 @@
+"""FACTS science sanity + workflow integration through the broker."""
+import numpy as np
+import pytest
+
+from repro.facts import model as facts
+
+
+def test_preprocess_deterministic():
+    a = facts.preprocess(3, seed=1)
+    b = facts.preprocess(3, seed=1)
+    np.testing.assert_array_equal(a["gsat"], b["gsat"])
+    c = facts.preprocess(4, seed=1)
+    assert not np.array_equal(a["gsat"], c["gsat"])
+
+
+def test_fit_recovers_positive_sensitivity():
+    pre = facts.preprocess(0, seed=0)
+    fitted = facts.fit(pre)
+    a, b = fitted["theta"]
+    assert a > 0  # warming raises sea level
+    assert fitted["sigma2"] > 0
+
+
+def test_projection_quantiles_ordered():
+    pre = facts.preprocess(1, seed=0)
+    fitted = facts.fit(pre)
+    proj = facts.project(pre, fitted, n_samples=500, seed=0)
+    out = facts.postprocess(proj)
+    q = out["quantiles"]
+    assert q["p5"] < q["p17"] < q["p50"] < q["p83"] < q["p95"]
+    assert 0 < q["p50"] < 3000  # plausible mm range for 2100
+
+
+def test_more_samples_tighter_median():
+    pre = facts.preprocess(2, seed=0)
+    fitted = facts.fit(pre)
+    meds = [
+        facts.postprocess(facts.project(pre, fitted, n_samples=n, seed=s))["quantiles"]["p50"]
+        for n, s in ((2000, 1), (2000, 2))
+    ]
+    assert abs(meds[0] - meds[1]) / max(abs(meds[0]), 1) < 0.2
+
+
+def test_full_workflow_through_broker(tmp_path):
+    from repro.core import Hydra, ProviderSpec, WorkflowManager
+    from repro.facts.workflow import make_workflow, result_of
+
+    h = Hydra(pod_store="memory", workdir=str(tmp_path))
+    h.register_provider(ProviderSpec(name="jet2", concurrency=4))
+    wfm = WorkflowManager(h)
+    wfs = [make_workflow(h.data, i, n_samples=100) for i in range(3)]
+    wfm.run(wfs)
+    assert all(w.done and not w.failed for w in wfs)
+    r = result_of(h.data, 1)
+    assert "p50" in r["quantiles"]
+    h.shutdown(wait=False)

@@ -1,0 +1,66 @@
+"""Binding policies: eligibility, balance, adaptivity."""
+from repro.core.policy import AdaptivePolicy, CapabilityPolicy, LoadAwarePolicy, RoundRobinPolicy
+from repro.core.provider import ProviderProxy, ProviderSpec
+from repro.core.task import Resources, Task
+
+
+def _providers(*specs):
+    proxy = ProviderProxy()
+    return [proxy.register(s) for s in specs]
+
+
+def test_round_robin_balances():
+    hs = _providers(ProviderSpec(name="a"), ProviderSpec(name="b"))
+    pol = RoundRobinPolicy()
+    picks = [pol.bind(Task(kind="noop"), hs) for _ in range(10)]
+    assert picks.count("a") == picks.count("b") == 5
+
+
+def test_pinned_provider_wins():
+    hs = _providers(ProviderSpec(name="a"), ProviderSpec(name="b"))
+    pol = RoundRobinPolicy()
+    t = Task(kind="noop", provider="b")
+    assert all(pol.bind(t, hs) == "b" for _ in range(3))
+
+
+def test_capability_routes_accel_tasks():
+    hs = _providers(
+        ProviderSpec(name="cpu_pool", node_capacity=Resources(cpus=64, accels=0, memory_mb=1 << 20)),
+        ProviderSpec(name="tpu_pool", node_capacity=Resources(cpus=16, accels=8, memory_mb=1 << 20)),
+    )
+    pol = CapabilityPolicy()
+    accel_task = Task(kind="noop", resources=Resources(cpus=1, accels=4))
+    cpu_task = Task(kind="noop", resources=Resources(cpus=8))
+    assert pol.bind(accel_task, hs) == "tpu_pool"
+    assert pol.bind(cpu_task, hs) == "cpu_pool"
+
+
+def test_load_aware_prefers_idle():
+    hs = _providers(ProviderSpec(name="a"), ProviderSpec(name="b"))
+    pol = LoadAwarePolicy()
+    first = pol.bind(Task(kind="noop"), hs)
+    second = pol.bind(Task(kind="noop"), hs)
+    assert {first, second} == {"a", "b"}
+
+
+def test_adaptive_prefers_faster_provider():
+    hs = _providers(ProviderSpec(name="fast"), ProviderSpec(name="slow"))
+    pol = AdaptivePolicy()
+    for _ in range(20):
+        pol.observe("fast", 0.01)
+        pol.observe("slow", 1.0)
+    picks = []
+    for _ in range(10):
+        p = pol.bind(Task(kind="noop"), hs)
+        picks.append(p)
+        pol.observe(p, 0.01 if p == "fast" else 1.0)
+    assert picks.count("fast") > picks.count("slow")
+
+
+def test_no_eligible_provider_raises():
+    import pytest
+
+    hs = _providers(ProviderSpec(name="tiny", node_capacity=Resources(cpus=1, accels=0, memory_mb=64)))
+    pol = RoundRobinPolicy()
+    with pytest.raises(RuntimeError):
+        pol.bind(Task(kind="noop", resources=Resources(cpus=128)), hs)

@@ -1,0 +1,87 @@
+"""Task state machine: legal transitions, idempotent completion, tracing."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.task import (
+    FINAL_STATES,
+    LEGAL,
+    IllegalTransition,
+    Resources,
+    Task,
+    TaskState,
+)
+
+ALL_STATES = list(TaskState)
+
+
+def test_legal_path_to_done():
+    t = Task(kind="noop")
+    for s in (TaskState.BOUND, TaskState.PARTITIONED, TaskState.SUBMITTED, TaskState.RUNNING):
+        t.advance(s)
+    t.mark_done(42)
+    assert t.tstate == TaskState.DONE
+    assert t.result() == 42
+
+
+def test_illegal_transition_raises():
+    t = Task(kind="noop")
+    with pytest.raises(IllegalTransition):
+        t.advance(TaskState.RUNNING)  # NEW -> RUNNING is illegal
+
+
+def test_mark_done_is_idempotent_and_authoritative():
+    t = Task(kind="noop")
+    t.advance(TaskState.BOUND)
+    t.mark_done("first")
+    t.mark_done("second")  # duplicate/speculative completion: no-op
+    assert t.result() == "first"
+    assert t.tstate == TaskState.DONE
+
+
+def test_mark_failed_ignored_when_not_inflight():
+    t = Task(kind="noop")
+    t.advance(TaskState.BOUND)
+    assert t.mark_failed(RuntimeError("stale")) is False
+    assert t.tstate == TaskState.BOUND
+
+
+def test_retry_cycle():
+    t = Task(kind="noop", max_retries=2)
+    for s in (TaskState.BOUND, TaskState.PARTITIONED, TaskState.SUBMITTED, TaskState.RUNNING):
+        t.advance(s)
+    assert t.mark_failed(RuntimeError("boom")) is True
+    assert not t.done()  # retries remain: no exception surfaced yet
+    t.reset_for_retry()
+    assert t.tstate == TaskState.BOUND and t.retries == 1
+
+
+def test_exhausted_retries_surface_exception():
+    t = Task(kind="noop", max_retries=0)
+    for s in (TaskState.BOUND, TaskState.PARTITIONED, TaskState.SUBMITTED, TaskState.RUNNING):
+        t.advance(s)
+    t.mark_failed(RuntimeError("boom"))
+    with pytest.raises(RuntimeError):
+        t.result(timeout=0.1)
+
+
+@given(st.lists(st.sampled_from(ALL_STATES), min_size=1, max_size=12))
+@settings(max_examples=200, deadline=None)
+def test_state_machine_never_leaves_final_states(path):
+    """Property: whatever transition sequence is attempted via try_advance,
+    a final-state task only changes via the explicit retry path."""
+    t = Task(kind="noop")
+    for target in path:
+        before = t.tstate
+        moved = t.try_advance(target)
+        if moved:
+            assert target in LEGAL[before]
+        else:
+            assert t.tstate == before
+        if before in FINAL_STATES and before != TaskState.FAILED:
+            assert t.tstate == before
+
+
+def test_resources_fits():
+    small = Resources(cpus=1, accels=0, memory_mb=100)
+    big = Resources(cpus=8, accels=2, memory_mb=1024)
+    assert small.fits(big) and not big.fits(small)

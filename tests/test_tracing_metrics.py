@@ -1,0 +1,72 @@
+"""OVH/TH/TPT/TTX metric derivation from traces (paper §5 definitions)."""
+from repro.core import Hydra, ProviderSpec, Task
+from repro.core.pod import DiskPodStore, MemoryPodStore, Pod
+from repro.runtime.tracing import Trace, compute_metrics
+
+
+class _FakeTask:
+    def __init__(self, t0, t1):
+        self.trace = Trace()
+        self.trace.add("exec_start", t0)
+        self.trace.add("exec_done", t1)
+
+
+class _FakePod:
+    def __init__(self, t0, t1):
+        self.trace = Trace()
+        self.trace.add("env_setup_start", t0)
+        self.trace.add("env_teardown_done", t1)
+
+
+def test_metric_formulas():
+    rt = Trace()
+    rt.add("bind_start", 0.0)
+    rt.add("bind_done", 1.0)
+    rt.add("partition_start", 1.0)
+    rt.add("partition_done", 1.5)
+    rt.add("serialize_start", 1.5)
+    rt.add("serialize_done", 2.5)
+    rt.add("submit_start", 2.5)
+    rt.add("submit_done", 3.0)
+    tasks = [_FakeTask(3.0, 5.0), _FakeTask(3.5, 6.0)]
+    pods = [_FakePod(2.9, 6.5)]
+    m = compute_metrics(rt, tasks, pods)
+    assert abs(m.ovh - 3.0) < 1e-9  # 1 + .5 + 1 + .5
+    assert abs(m.th - 2 / 3.0) < 1e-9  # 2 tasks / (3.0 - 0.0)
+    assert abs(m.tpt - 3.6) < 1e-9  # 6.5 - 2.9
+    assert abs(m.ttx - 3.0) < 1e-9  # 6.0 - 3.0
+    assert m.phases["bind"] == 1.0
+
+
+def test_disk_store_writes_and_cleans(tmp_path):
+    store = DiskPodStore(str(tmp_path))
+    t = Task(kind="noop")
+    pod = Pod("prov", [t], "scpp")
+    store.serialize(pod)
+    assert pod.path and pod.serialized
+    import os
+
+    assert os.path.exists(pod.path)
+    store.cleanup()
+    assert not os.path.exists(pod.path)
+
+
+def test_memory_store_serializes_without_files():
+    store = MemoryPodStore()
+    pod = Pod("prov", [Task(kind="noop")], "mcpp")
+    store.serialize(pod)
+    assert pod.serialized and pod.path is None
+
+
+def test_ovh_dominated_by_tasks_not_provider(tmp_path):
+    """Paper claim: OVH depends on #tasks/#pods, not on the provider."""
+    ovhs = {}
+    for prov in ("a", "b"):
+        h = Hydra(pod_store="memory", workdir=str(tmp_path / prov))
+        h.register_provider(ProviderSpec(name=prov, concurrency=4))
+        sub = h.submit([Task(kind="noop") for _ in range(400)])
+        sub.wait(timeout=60)
+        ovhs[prov] = sub.metrics().ovh
+        h.shutdown(wait=False)
+    ratio = max(ovhs.values()) / max(min(ovhs.values()), 1e-9)
+    assert ratio < 3.0  # same order of magnitude on a noisy shared core
