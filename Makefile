@@ -1,0 +1,22 @@
+# Tooling entry points (see README.md).  PYTHONPATH-based src layout: no
+# install step, no new dependencies.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-full bench-groups
+
+test:  ## tier-1 verify (ROADMAP.md)
+	$(PY) -m pytest -x -q
+
+test-fast:  ## skip the slow end-to-end marks
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:  ## scaled-down benchmark suite -> artifacts/bench/*.csv
+	$(PY) -m benchmarks.run
+
+bench-full:  ## paper-scale task counts
+	$(PY) -m benchmarks.run --full
+
+bench-groups:  ## exp5 only: provider-group throughput + failover overhead
+	$(PY) -m benchmarks.exp5_groups

@@ -1,0 +1,91 @@
+"""Exp 5 (beyond-paper): provider groups — balanced throughput + failover.
+
+Two questions, per EXPERIMENTS.md §Perf:
+
+  1. What does the group indirection cost?  OVH/TH/TPT for the same noop
+     workload bound to a 1-, 2-, and 4-member group (members are identical
+     cloud pools, so k=1 isolates the indirection itself: bind to a group
+     that degenerates to one provider vs. the member count scaling).
+  2. What does failover cost?  The same sleep workload on a k-member group
+     with one member killed mid-run vs. undisturbed; the delta in wall time
+     is the failover overhead (orphan collection + re-partition + re-submit
+     to surviving members).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Hydra, ProviderSpec, Task
+
+from benchmarks.common import print_rows, write_csv
+
+
+def _member_specs(k: int, concurrency: int = 4) -> list[ProviderSpec]:
+    return [ProviderSpec(name=f"m{i}", concurrency=concurrency) for i in range(k)]
+
+
+def _run(k: int, n_tasks: int, kill_member: bool, sleep_s: float = 0.0):
+    h = Hydra(pod_store="memory", tasks_per_pod=16)
+    group = h.register_group("pool", _member_specs(k), strategy="round_robin")
+    kind = "sleep" if sleep_s else "noop"
+    tasks = [Task(kind=kind, duration=sleep_s) for _ in range(n_tasks)]
+    t0 = time.perf_counter()
+    sub = h.submit(tasks)
+    if kill_member:
+        h.manager("m0").fail()  # ProviderDown mid-run -> in-group failover
+    ok = sub.wait(timeout=600)
+    wall = time.perf_counter() - t0
+    m = sub.metrics()
+    states = dict(sub.states)
+    breaker = group.breaker_state("m0").value
+    h.shutdown(wait=False)
+    assert ok and states == {"DONE": n_tasks}, (k, kill_member, states)
+    return wall, m, breaker
+
+
+def main(full: bool = False) -> list[dict]:
+    n_noop = 2000 if full else 400
+    n_sleep = 600 if full else 150
+    sleep_s = 0.004
+    rows = []
+    for k in (1, 2, 4):
+        # balanced throughput: pure broker path, no failure
+        wall, m, _ = _run(k, n_noop, kill_member=False)
+        rows.append(
+            {"exp": "throughput", "members": k, "failover": 0, "wall_s": round(wall, 4), **m.row()}
+        )
+        # failover overhead: kill one member mid-run (k=1 has no survivor to
+        # fail over to, so the baseline row doubles as its failover bound)
+        base_wall, base_m, _ = _run(k, n_sleep, kill_member=False, sleep_s=sleep_s)
+        if k > 1:
+            fail_wall, fail_m, breaker = _run(k, n_sleep, kill_member=True, sleep_s=sleep_s)
+            rows.append(
+                {
+                    "exp": "failover",
+                    "members": k,
+                    "failover": 1,
+                    "wall_s": round(fail_wall, 4),
+                    "failover_overhead_s": round(fail_wall - base_wall, 4),
+                    "breaker_m0": breaker,
+                    **fail_m.row(),
+                }
+            )
+        else:
+            rows.append(
+                {
+                    "exp": "failover",
+                    "members": k,
+                    "failover": 0,
+                    "wall_s": round(base_wall, 4),
+                    "failover_overhead_s": 0.0,
+                    "breaker_m0": "CLOSED",
+                    **base_m.row(),
+                }
+            )
+    write_csv("exp5_groups", rows)
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main("--full" in __import__("sys").argv)

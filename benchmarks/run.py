@@ -25,7 +25,8 @@ def main() -> None:
     out = []
 
     from benchmarks import exp1_per_provider, exp2_cross_provider, exp3a_cross_platform
-    from benchmarks import exp3b_heterogeneous, exp4_facts, kernels_bench, roofline_report
+    from benchmarks import exp3b_heterogeneous, exp4_facts, exp5_groups
+    from benchmarks import kernels_bench, roofline_report
 
     print("== Exp 1: per-provider scaling (OVH/TH/TPT, MCPP vs SCPP) ==")
     r1 = exp1_per_provider.main(full)
@@ -47,6 +48,10 @@ def main() -> None:
     r4 = exp4_facts.main(full)
     ovh_fracs = [r["ovh_frac"] for r in r4]
     out.append(f"exp4_facts,{sum(r['ttx_s'] for r in r4)/len(r4)*1e6:.0f},mean_ovh_frac={sum(ovh_fracs)/len(ovh_fracs):.4f}")
+
+    print("== Exp 5: provider groups (balanced TPT + failover OVH) ==")
+    r5 = exp5_groups.main(full)
+    out.append(_summary("exp5_groups", r5))
 
     print("== Kernel micro-benchmarks ==")
     for name, us, derived in kernels_bench.main(full):

@@ -1,0 +1,46 @@
+"""JAX version compatibility shims.
+
+The container pins jax 0.4.x while parts of this codebase were written
+against newer releases.  Two surfaces differ:
+
+  * ``jax.make_mesh``: newer JAX wants explicit Auto ``axis_types``; 0.4.x
+    has neither the kwarg nor ``jax.sharding.AxisType``.
+  * ``jax.shard_map``: newer JAX exposes it at top level with ``check_vma``;
+    0.4.x has ``jax.experimental.shard_map.shard_map`` with ``check_rep``.
+  * ``compiled.cost_analysis()``: newer JAX returns one dict; 0.4.x returns
+    a list of per-computation dicts.
+
+Only these shims may branch on the JAX version; call sites stay uniform.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def compat_make_mesh(shape, axes):
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
+def compat_shard_map(f, mesh, in_specs, out_specs):
+    """shard_map with replication/VMA checking off (we manage collectives
+    explicitly in compression/attention paths)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def compat_cost_analysis(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

@@ -1,12 +1,19 @@
 """Hydra broker core: the paper's contribution as a composable module."""
 from repro.core.broker import Hydra, Submission
+from repro.core.fault import BreakerState, CircuitBreaker
+from repro.core.group import GroupExhausted, GroupMember, ProviderGroup
 from repro.core.managers.workflow import Workflow, WorkflowManager
 from repro.core.provider import ProviderProxy, ProviderSpec
 from repro.core.resource import ResourceRequest
 from repro.core.task import Resources, Task, TaskState
 
 __all__ = [
+    "BreakerState",
+    "CircuitBreaker",
+    "GroupExhausted",
+    "GroupMember",
     "Hydra",
+    "ProviderGroup",
     "Submission",
     "Workflow",
     "WorkflowManager",

@@ -9,14 +9,18 @@
     hydra.shutdown()
 
 Responsibilities (mirroring the paper's Service Proxy):
-  * bind tasks to providers via the configured policy,
+  * bind tasks to providers — or to ProviderGroups, logical load-balanced
+    pools whose concrete member is resolved at dispatch time — via the
+    configured policy,
   * partition per-provider workloads into pods (SCPP/MCPP/binpack),
   * serialize pods via the configured store (disk = faithful baseline,
     memory = the paper's named optimization),
   * bulk-submit pods to each provider's manager CONCURRENTLY,
   * monitor execution, drive retries / re-binding / blacklisting /
+    per-member circuit breakers / transparent in-group failover /
     speculative straggler copies, and
-  * compute OVH / TH / TPT / TTX from the traces.
+  * compute OVH / TH / TPT / TTX from the traces (plus per-member group
+    rows via ``group_rows()``).
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
 from typing import Optional
 
 from repro.core.fault import StragglerWatchdog, clone_for_speculation
+from repro.core.group import GroupExhausted, ProviderGroup
 from repro.core.managers.compute import CaaSManager, ProviderDown
 from repro.core.managers.data import DataManager
 from repro.core.managers.pilot import PilotManager
@@ -122,9 +127,61 @@ class Hydra:
         handle = self.proxy.register(spec)
         mgr_cls = PilotManager if spec.connector == "pilot" else CaaSManager
         with self._lock:
-            self._managers[spec.name] = mgr_cls(handle, on_task_done=self._on_task_done)
+            self._managers[spec.name] = mgr_cls(
+                handle,
+                on_task_done=self._on_task_done,
+                on_task_skipped=self._on_task_skipped,
+            )
         self.data.register_site(spec.name)
         return handle
+
+    def register_group(
+        self,
+        name: str,
+        members: list,
+        strategy: str = "round_robin",
+        failure_threshold: int = 3,
+        reset_timeout_s: float = 30.0,
+        min_healthy: int = 1,
+    ) -> ProviderGroup:
+        """Pool providers behind one logical bind target (core/group.py).
+
+        ``members`` mixes ProviderSpecs (registered on the fly) and names of
+        already-registered providers.  Policies bind tasks to ``name``; the
+        group resolves the concrete member at dispatch time and fails work
+        over transparently when a member dies."""
+        handles = []
+        added: list[str] = []  # members registered here, for rollback
+        try:
+            for m in members:
+                if isinstance(m, ProviderSpec):
+                    handles.append(self.register_provider(m))
+                    added.append(m.name)
+                else:
+                    handles.append(self.proxy.get(m))
+            group = ProviderGroup(
+                name,
+                handles,
+                strategy=strategy,
+                failure_threshold=failure_threshold,
+                reset_timeout_s=reset_timeout_s,
+                min_healthy=min_healthy,
+            )
+            self.proxy.register_group(group)
+            return group
+        except Exception:
+            # a failed group registration must not leak its on-the-fly
+            # members into the direct-binding pool
+            for member in added:
+                with self._lock:
+                    mgr = self._managers.pop(member, None)
+                if mgr is not None:
+                    mgr.shutdown(wait=False)
+                try:
+                    self.proxy.deregister(member)
+                except KeyError:
+                    pass
+            raise
 
     def remove_provider(self, name: str, drain: bool = True):
         """Elastic scale-down: stop a provider; re-bind its unfinished tasks."""
@@ -133,13 +190,30 @@ class Hydra:
             handle = self.proxy.get(name)
             handle.healthy = False
         mgr.fail()  # reject anything in flight
-        with self._fault_lock:
-            orphans = self._collect_orphans(name)
-            self._rebind_and_resubmit(orphans, exclude=name)
+        if handle.group is not None:
+            group = self.proxy.get_group(handle.group)
+            group.mark_down(name)  # out of rotation before the orphan sweep
+            with self._fault_lock:
+                orphans = self._collect_orphans(name)
+                self._redispatch_in_group(group, orphans, exclude=name)
+            group.remove_member(name)  # permanent: no probes to a dead slot
+            handle.group = None
+        else:
+            with self._fault_lock:
+                orphans = self._collect_orphans(name)
+                self._rebind_and_resubmit(orphans, exclude=name)
         mgr.shutdown(wait=drain)
 
     def providers(self) -> list[str]:
         return [h.name for h in self.proxy.healthy()]
+
+    def group(self, name: str) -> ProviderGroup:
+        return self.proxy.get_group(name)
+
+    def group_rows(self) -> list[dict]:
+        """Group-aware metrics: one row per group member (breaker state,
+        trips, dispatched/completed/failed/outstanding, weight)."""
+        return [row for g in self.proxy.groups() for row in g.stats()]
 
     def manager(self, name: str):
         return self._managers[name]
@@ -162,13 +236,14 @@ class Hydra:
 
         # -- bind ----------------------------------------------------------
         rt.add("bind_start")
-        healthy = self.proxy.healthy()
-        if not healthy:
+        targets = self.proxy.bind_targets()
+        if not targets:
             raise RuntimeError("no healthy providers registered")
         by_provider: dict[str, list[Task]] = {}
-        names = self.policy.bind_bulk(tasks, healthy)
+        names = self.policy.bind_bulk(tasks, targets)
         for t, name in zip(tasks, names):
             t.provider = name
+            t.group = name if self.proxy.is_group(name) else None
             t.advance(TaskState.BOUND)
             by_provider.setdefault(name, []).append(t)
         rt.add("bind_done")
@@ -209,6 +284,9 @@ class Hydra:
         return sub
 
     def _submit_to_provider(self, name: str, pods: list[Pod]):
+        if self.proxy.is_group(name):
+            self._submit_to_group(self.proxy.get_group(name), pods)
+            return
         try:
             self._managers[name].submit_pods(pods)
         except ProviderDown:
@@ -216,21 +294,124 @@ class Hydra:
             raise
 
     # ------------------------------------------------------------------
+    # Group dispatch: the group resolves the member per pod at dispatch
+    # time; member loss is absorbed here (transparent failover) instead of
+    # propagating to the caller's policy.
+    # ------------------------------------------------------------------
+    def _submit_to_group(self, group: ProviderGroup, pods: list[Pod], exclude: Optional[str] = None):
+        # resolve the member per pod, then ONE bulk submit_pods per member:
+        # per-pod submits would pay the modeled submit latency per pod
+        # instead of per provider, inflating the group indirection cost
+        by_member: dict[str, list[Pod]] = {}
+        for pod in pods:
+            try:
+                member = group.select(exclude=exclude)
+            except GroupExhausted:
+                self._group_exhausted(group, pod.tasks)
+                continue
+            pod.provider = member
+            for t in pod.tasks:
+                t.provider = member
+                t.group = group.name
+                t.trace.add(f"dispatch:{group.name}->{member}")
+            group.note_dispatch(member, len(pod.tasks))
+            by_member.setdefault(member, []).append(pod)
+        for member, member_pods in by_member.items():
+            self._submit_member_pods(group, member, member_pods)
+
+    def _submit_member_pods(self, group: ProviderGroup, member: str, pods: list[Pod]):
+        mgr = self._managers.get(member)  # gone if elastically removed
+        try:
+            if mgr is None:
+                raise ProviderDown(member)
+            mgr.submit_pods(pods)
+        except ProviderDown:
+            self._handle_member_down(group, member)
+
+    def _group_exhausted(self, group: ProviderGroup, tasks: list[Task]):
+        """Every member breaker open: fall back to cross-provider re-bind."""
+        with self._fault_lock:
+            live = []
+            with self._lock:
+                for t in tasks:
+                    if t.final or t.uid in self._claimed:
+                        continue
+                    self._claimed.add(t.uid)
+                    live.append(t)
+            for t in live:
+                t.try_advance(TaskState.BOUND)
+            self._rebind_and_resubmit(live, exclude=group.name)
+
+    def _handle_member_down(self, group: ProviderGroup, member: str):
+        """A group member died: open its breaker, fail its in-flight work
+        over to surviving members without involving the binding policy."""
+        group.mark_down(member)
+        with self._lock:
+            handle = self.proxy.get(member)
+            handle.trace.add(f"breaker_open:{group.name}")
+        with self._fault_lock:
+            orphans = self._collect_orphans(member)
+            self._redispatch_in_group(group, orphans, exclude=member)
+
+    def _redispatch_in_group(self, group: ProviderGroup, tasks: list[Task], exclude: Optional[str] = None):
+        """Re-bind claimed tasks to surviving group members; overflow (group
+        exhausted) falls back to the policy re-bind path."""
+        if not tasks:
+            return
+        by_member: dict[str, list[Task]] = {}
+        fallback: list[Task] = []
+        for t in tasks:
+            try:
+                member = group.select(exclude=exclude)
+            except GroupExhausted:
+                fallback.append(t)
+                continue
+            t.provider = member
+            t.group = group.name
+            t.trace.add(f"failover:{member}")
+            by_member.setdefault(member, []).append(t)
+        for member, ts in by_member.items():
+            group.note_dispatch(member, len(ts))
+            pods = partition(ts, member, model="mcpp", tasks_per_pod=self.tasks_per_pod)
+            for p in pods:
+                for t in p.tasks:
+                    t.try_advance(TaskState.PARTITIONED)
+                    self._release_claim(t)  # re-claimable if this member dies too
+                self.store.serialize(p)
+            self._dispatch.submit(self._submit_member_pods, group, member, pods)
+        if fallback:
+            self._rebind_and_resubmit(fallback, exclude=group.name)
+
+    # ------------------------------------------------------------------
     # Completion / fault handling
     # ------------------------------------------------------------------
     def _on_task_done(self, task: Task, provider: str, failed: bool):
+        # policies observe the *logical* bound name: member churn inside a
+        # group must not leak into policy load/EWMA accounting
+        logical = task.group or provider
         t0, t1 = task.trace.first("exec_start"), task.trace.last("exec_done")
         if t0 is not None and t1 is not None:
-            self.policy.observe(provider, t1 - t0)
+            self.policy.observe(logical, t1 - t0)
             if self.watchdog:
                 self.watchdog.observe_completion(t1 - t0)
         else:
-            self.policy.observe(provider, 1e-3)
+            self.policy.observe(logical, 1e-3)
+        group: Optional[ProviderGroup] = None
+        if task.group and self.proxy.is_group(task.group):
+            group = self.proxy.get_group(task.group)
+        exc = getattr(task, "last_error", None) if failed else None
+        if group is not None:
+            if failed:
+                group.record_failure(provider)
+            else:
+                group.record_success(provider)
         if not failed:
             return
-        exc = getattr(task, "last_error", None)
-        if isinstance(exc, ProviderDown):
-            self._handle_provider_down(provider)
+        if isinstance(exc, ProviderDown):  # _handle_*_down owns the outage transition
+            if group is not None:
+                self._handle_member_down(group, provider)
+            else:
+                self._handle_provider_down(provider)
             return
         with self._fault_lock:
             if task.uid in self._claimed or task.tstate != TaskState.FAILED:
@@ -242,7 +423,17 @@ class Hydra:
                 if self.fail_fast:
                     self._cancel_all_pending()
                 return
-            self._rebind_and_resubmit([task], exclude=provider)
+            if group is not None:
+                # transparent in-group retry, never the member that failed it
+                self._redispatch_in_group(group, [task], exclude=provider)
+            else:
+                self._rebind_and_resubmit([task], exclude=provider)
+
+    def _on_task_skipped(self, task: Task, provider: str):
+        """A manager skipped a task that went final elsewhere (speculation /
+        failover race): release the member's load slot."""
+        if task.group and self.proxy.is_group(task.group):
+            self.proxy.get_group(task.group).record_skip(provider)
 
     def _handle_provider_down(self, name: str):
         with self._lock:
@@ -297,16 +488,17 @@ class Hydra:
     def _rebind_and_resubmit(self, tasks: list[Task], exclude: Optional[str] = None):
         if not tasks:
             return
-        healthy = [h for h in self.proxy.healthy() if h.name != exclude]
-        if not healthy:
+        targets = [h for h in self.proxy.bind_targets() if h.name != exclude]
+        if not targets:
             for t in tasks:
                 if not t.done():
                     t.set_exception(RuntimeError("no healthy providers for retry"))
             return
         by_provider: dict[str, list[Task]] = {}
         for t in tasks:
-            name = self.policy.bind(t, healthy)
+            name = self.policy.bind(t, targets)
             t.provider = name
+            t.group = name if self.proxy.is_group(name) else None
             t.trace.add(f"rebound:{name}")
             by_provider.setdefault(name, []).append(t)
         for name, ts in by_provider.items():
@@ -321,13 +513,39 @@ class Hydra:
             self._dispatch.submit(self._submit_to_provider, name, pods)
 
     def _speculate(self, task: Task):
-        """Straggler: launch a speculative clone on a different provider."""
-        healthy = [h for h in self.proxy.healthy() if h.name != task.provider]
-        if not healthy:
+        """Straggler: launch a speculative clone on a different provider.
+        For group-bound tasks the clone stays inside the group (on another
+        member) and the straggle counts against the member's breaker."""
+        if task.group and self.proxy.is_group(task.group):
+            group = self.proxy.get_group(task.group)
+            group.record_straggler(task.provider)
+            try:
+                member = group.select(exclude=task.provider)
+            except GroupExhausted:
+                member = None
+            if member is not None:
+                shadow = clone_for_speculation(task)
+                shadow.group = group.name
+                shadow.provider = member
+                shadow.advance(TaskState.BOUND)
+                pods = partition([shadow], member, model="scpp")
+                group.note_dispatch(member, 1)
+                for p in pods:
+                    shadow.advance(TaskState.PARTITIONED)
+                    self.store.serialize(p)
+                self._dispatch.submit(self._submit_member_pods, group, member, pods)
+                return
+        targets = [
+            h
+            for h in self.proxy.bind_targets()
+            if h.name != task.provider and h.name != task.group
+        ]
+        if not targets:
             return
         shadow = clone_for_speculation(task)
-        name = self.policy.bind(shadow, healthy)
+        name = self.policy.bind(shadow, targets)
         shadow.provider = name
+        shadow.group = name if self.proxy.is_group(name) else None
         shadow.advance(TaskState.BOUND)
         pods = partition([shadow], name, model="scpp")
         for p in pods:

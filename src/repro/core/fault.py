@@ -1,5 +1,6 @@
 """Fault tolerance: retry/re-bind on task failure, provider blacklisting on
-outage, and straggler mitigation via speculative duplicate dispatch.
+outage, straggler mitigation via speculative duplicate dispatch, and the
+per-member circuit breaker used by provider groups (core/group.py).
 
 The paper's Hydra ensures graceful teardown on failure; at 1000+ node scale
 the broker additionally has to *survive* provider loss.  Policy here:
@@ -9,20 +10,138 @@ the broker additionally has to *survive* provider loss.  Policy here:
                       give up after task.max_retries and surface the error.
   provider outage  -> blacklist the provider, fail-fast its in-flight tasks,
                       re-bind + resubmit everything non-final it owned.
+  grouped member   -> the member's circuit breaker opens (immediately on
+                      ProviderDown, after `failure_threshold` consecutive
+                      errors otherwise); orphans fail over to surviving group
+                      members without touching the caller's binding policy;
+                      after `reset_timeout_s` a single half-open probe is let
+                      through and either closes or re-opens the breaker.
   straggler        -> a watchdog compares running tasks against
                       factor * median(completed runtimes); slow tasks get a
                       speculative clone on another provider; first completion
                       wins (the Task state machine makes the loser a no-op).
+                      A straggler on a grouped member also counts as a soft
+                      failure against that member's breaker.
 """
 from __future__ import annotations
 
 import statistics
 import threading
 import time
+from enum import Enum
 from typing import Callable, Optional
 
 from repro.core.task import Task, TaskState
 from repro.runtime.tracing import now
+
+
+class BreakerState(str, Enum):
+    CLOSED = "CLOSED"  # healthy: traffic flows
+    OPEN = "OPEN"  # tripped: no traffic until reset timeout elapses
+    HALF_OPEN = "HALF_OPEN"  # probing: exactly one request allowed through
+
+
+class CircuitBreaker:
+    """Consecutive-failure circuit breaker with a timed half-open probe.
+
+    State machine:
+      CLOSED   --(failures >= failure_threshold, or trip())-->  OPEN
+      OPEN     --(reset_timeout_s elapsed; next allow())----->  HALF_OPEN
+      HALF_OPEN --(record_success x success_threshold)------->  CLOSED
+      HALF_OPEN --(record_failure)-------------------------->  OPEN
+
+    ``allow()`` is the dispatch gate: it returns True when traffic may be
+    sent, and performs the OPEN -> HALF_OPEN transition itself so that the
+    caller that wins the race becomes the probe.  While HALF_OPEN, only the
+    probe is in flight; everyone else is rejected until it resolves.
+    """
+
+    def __init__(
+        self,
+        failure_threshold: int = 3,
+        reset_timeout_s: float = 30.0,
+        success_threshold: int = 1,
+    ):
+        self.failure_threshold = failure_threshold
+        self.reset_timeout_s = reset_timeout_s
+        self.success_threshold = success_threshold
+        self.state = BreakerState.CLOSED
+        self.consecutive_failures = 0
+        self.half_open_successes = 0
+        self.opened_at: Optional[float] = None
+        self.trips = 0  # times the breaker opened (metrics)
+        self._probe_inflight = False
+        self._lock = threading.Lock()
+
+    # -- gates -----------------------------------------------------------
+    def allow(self) -> bool:
+        """May traffic be dispatched right now?  (Mutates OPEN -> HALF_OPEN.)"""
+        with self._lock:
+            if self.state == BreakerState.CLOSED:
+                return True
+            if self.state == BreakerState.OPEN:
+                if self.opened_at is not None and now() - self.opened_at >= self.reset_timeout_s:
+                    self.state = BreakerState.HALF_OPEN
+                    self.half_open_successes = 0
+                    self._probe_inflight = True
+                    return True  # this caller is the probe
+                return False
+            # HALF_OPEN: single probe at a time
+            if not self._probe_inflight:
+                self._probe_inflight = True
+                return True
+            return False
+
+    def available(self) -> bool:
+        """Non-mutating peek: would allow() plausibly return True?"""
+        with self._lock:
+            if self.state == BreakerState.CLOSED:
+                return True
+            if self.state == BreakerState.OPEN:
+                return self.opened_at is not None and now() - self.opened_at >= self.reset_timeout_s
+            return not self._probe_inflight
+
+    # -- outcome feedback ------------------------------------------------
+    def record_success(self) -> None:
+        with self._lock:
+            self.consecutive_failures = 0
+            if self.state == BreakerState.HALF_OPEN:
+                self._probe_inflight = False
+                self.half_open_successes += 1
+                if self.half_open_successes >= self.success_threshold:
+                    self.state = BreakerState.CLOSED
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self.consecutive_failures += 1
+            if self.state == BreakerState.HALF_OPEN:
+                self._reopen()
+            elif self.state == BreakerState.CLOSED and self.consecutive_failures >= self.failure_threshold:
+                self._reopen()
+
+    def release_probe(self) -> None:
+        """The dispatched probe never actually ran (its task finished
+        elsewhere first): return the ticket so the next allow() can probe,
+        instead of stranding the breaker HALF_OPEN forever."""
+        with self._lock:
+            if self.state == BreakerState.HALF_OPEN:
+                self._probe_inflight = False
+
+    def trip(self) -> None:
+        """Open immediately (hard signal: ProviderDown / watchdog verdict)."""
+        with self._lock:
+            if self.state != BreakerState.OPEN:
+                self._reopen()
+            else:
+                self.opened_at = now()  # re-stamp: extend the open window
+
+    def _reopen(self) -> None:
+        # callers hold self._lock
+        self.state = BreakerState.OPEN
+        self.opened_at = now()
+        self.trips += 1
+        self._probe_inflight = False
+        self.half_open_successes = 0
 
 
 class StragglerWatchdog:

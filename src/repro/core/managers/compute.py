@@ -77,8 +77,10 @@ class ComputeRuntime:
         key = (task.arch, step_kind)
 
         def build():
+            from repro.compat import compat_make_mesh
+
             model = Model(arch)
-            mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = compat_make_mesh((1,), ("data",))
             strategy = STRATEGIES["tp"]
             if step_kind == "train":
                 fn = jax.jit(
@@ -119,16 +121,26 @@ COMPUTE_RUNTIME = ComputeRuntime()
 class CaaSManager:
     """One per cloud-like provider.  Bulk pod submission + tracing."""
 
-    def __init__(self, handle: ProviderHandle, on_task_done: Optional[Callable] = None):
+    def __init__(
+        self,
+        handle: ProviderHandle,
+        on_task_done: Optional[Callable] = None,
+        on_task_skipped: Optional[Callable] = None,
+    ):
         self.handle = handle
         self.spec = handle.spec
         self.on_task_done = on_task_done
+        self.on_task_skipped = on_task_skipped
         self._pool = ThreadPoolExecutor(
             max_workers=self.spec.concurrency, thread_name_prefix=f"caas-{handle.name}"
         )
         self._down = threading.Event()
         self._inflight: set = set()
         self._lock = threading.Lock()
+        # health signal counters: consumed by provider-group breakers and
+        # the group-aware metrics rows (broker.group_rows / benchmarks)
+        self.completed = 0
+        self.failed = 0
 
     # -- lifecycle -----------------------------------------------------
     def fail(self):
@@ -137,6 +149,14 @@ class CaaSManager:
 
     def recover(self):
         self._down.clear()
+
+    def stats(self) -> dict:
+        return {
+            "provider": self.handle.name,
+            "down": self.down,
+            "completed": self.completed,
+            "failed": self.failed,
+        }
 
     @property
     def down(self) -> bool:
@@ -185,18 +205,25 @@ class CaaSManager:
             pod.trace.add("env_teardown_done")
 
     def _run_task(self, task: Task):
-        if task.final:  # canceled or speculatively completed elsewhere
-            return
-        if not task.try_advance(TaskState.RUNNING):
+        # canceled, speculatively completed elsewhere, or re-bound away:
+        # tell the broker so group load accounting releases the slot
+        if task.final or not task.try_advance(TaskState.RUNNING):
+            if self.on_task_skipped:
+                self.on_task_skipped(task, self.handle.name)
             return
         task.trace.add("exec_start")
         try:
             result = self._execute(task)
         except BaseException as e:
-            if task.mark_failed(e) and self.on_task_done:
-                self.on_task_done(task, self.handle.name, failed=True)
+            if task.mark_failed(e):
+                with self._lock:
+                    self.failed += 1
+                if self.on_task_done:
+                    self.on_task_done(task, self.handle.name, failed=True)
             return
         task.mark_done(result)
+        with self._lock:
+            self.completed += 1
         if self.on_task_done:
             self.on_task_done(task, self.handle.name, failed=False)
 

@@ -20,16 +20,26 @@ from repro.runtime.tracing import Trace
 
 
 class PilotManager:
-    def __init__(self, handle: ProviderHandle, on_task_done: Optional[Callable] = None):
+    def __init__(
+        self,
+        handle: ProviderHandle,
+        on_task_done: Optional[Callable] = None,
+        on_task_skipped: Optional[Callable] = None,
+    ):
         self.handle = handle
         self.spec = handle.spec
         self.on_task_done = on_task_done
+        self.on_task_skipped = on_task_skipped
         self.trace = Trace()
         self._q: queue.Queue = queue.Queue()
         self._down = threading.Event()
         self._stop = threading.Event()
         self._started = threading.Event()
         self._workers: list[threading.Thread] = []
+        self._stats_lock = threading.Lock()
+        # health signal counters (see CaaSManager.stats)
+        self.completed = 0
+        self.failed = 0
         self._boot = threading.Thread(target=self._acquire_pilot, daemon=True)
         self._boot.start()
 
@@ -56,6 +66,14 @@ class PilotManager:
     @property
     def down(self) -> bool:
         return self._down.is_set()
+
+    def stats(self) -> dict:
+        return {
+            "provider": self.handle.name,
+            "down": self.down,
+            "completed": self.completed,
+            "failed": self.failed,
+        }
 
     def shutdown(self, wait: bool = True):
         self._stop.set()
@@ -101,9 +119,10 @@ class PilotManager:
                 pod.trace.add("env_teardown_done")
 
     def _run_task(self, task: Task):
-        if task.final:
-            return
-        if not task.try_advance(TaskState.RUNNING):
+        # finished elsewhere or re-bound away: release the group load slot
+        if task.final or not task.try_advance(TaskState.RUNNING):
+            if self.on_task_skipped:
+                self.on_task_skipped(task, self.handle.name)
             return
         task.trace.add("exec_start")
         try:
@@ -119,9 +138,14 @@ class PilotManager:
             else:
                 raise ValueError(task.kind)
         except BaseException as e:
-            if task.mark_failed(e) and self.on_task_done:
-                self.on_task_done(task, self.handle.name, failed=True)
+            if task.mark_failed(e):
+                with self._stats_lock:
+                    self.failed += 1
+                if self.on_task_done:
+                    self.on_task_done(task, self.handle.name, failed=True)
             return
         task.mark_done(result)
+        with self._stats_lock:
+            self.completed += 1
         if self.on_task_done:
             self.on_task_done(task, self.handle.name, failed=False)

@@ -5,6 +5,13 @@ The paper's released Hydra binds statically before execution; *adaptive*
 runtime re-binding is its stated future work ("dynamic and adaptive binding
 of tasks to resources at runtime", §6) and is implemented here as
 ``AdaptivePolicy`` (beyond-paper, measured in EXPERIMENTS.md §Perf).
+
+Policies bind to *targets*, which are either concrete ``ProviderHandle``s or
+logical ``ProviderGroup``s (core/group.py) — both expose ``.name`` and
+``.spec.capacity()``, which is all a policy may rely on.  When a task is
+bound to a group, the group resolves the concrete member at dispatch time;
+runtime feedback (``observe``) arrives keyed by the *logical* bound name, so
+a policy's load/EWMA accounting never sees intra-group member churn.
 """
 from __future__ import annotations
 
@@ -19,19 +26,22 @@ from repro.core.task import Task
 class Policy:
     name = "base"
 
-    def bind(self, task: Task, providers: list[ProviderHandle]) -> str:
+    def bind(self, task: Task, providers: list) -> str:
+        """providers: bind targets — ProviderHandle or ProviderGroup."""
         raise NotImplementedError
 
-    def bind_bulk(self, tasks: list[Task], providers: list[ProviderHandle]) -> list[str]:
+    def bind_bulk(self, tasks: list[Task], providers: list) -> list[str]:
         """Vectorized binding (§Perf): one eligibility pass for homogeneous
         spans instead of a per-task policy call.  Default falls back to the
         per-task path; policies may override."""
         return [self.bind(t, providers) for t in tasks]
 
     def observe(self, provider: str, runtime_s: float) -> None:
-        """Runtime feedback hook (used by adaptive policies)."""
+        """Runtime feedback hook (used by adaptive policies).  ``provider``
+        is the logical bound name: a group name for group-bound tasks."""
 
-    def _eligible(self, task: Task, providers: list[ProviderHandle]) -> list[ProviderHandle]:
+    def _eligible(self, task: Task, providers: list) -> list:
+        """Targets that can fit the task (a pin may name a group too)."""
         if task.pinned_provider:
             pin = [p for p in providers if p.name == task.pinned_provider]
             if pin:

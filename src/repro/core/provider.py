@@ -56,11 +56,17 @@ class ProviderSpec:
 
 @dataclass
 class ProviderHandle:
-    """A validated provider: spec + live device slice + health state."""
+    """A validated provider: spec + live device slice + health state.
+
+    ``group`` names the ProviderGroup the provider is pooled into, if any;
+    grouped providers are reached through their group's logical name and are
+    excluded from direct policy binding (their health lives in the group's
+    per-member circuit breaker, see core/group.py)."""
 
     spec: ProviderSpec
     devices: list = field(default_factory=list)
     healthy: bool = True
+    group: Optional[str] = None
     trace: Trace = field(default_factory=Trace)
 
     @property
@@ -69,17 +75,19 @@ class ProviderHandle:
 
 
 class ProviderProxy:
-    """Registry + validation of providers (the paper's Provider Proxy)."""
+    """Registry + validation of providers and provider groups (the paper's
+    Provider Proxy, extended with the group layer)."""
 
     def __init__(self):
         self._providers: dict[str, ProviderHandle] = {}
+        self._groups: dict[str, Any] = {}  # name -> ProviderGroup
         self._lock = threading.Lock()
 
     def register(self, spec: ProviderSpec) -> ProviderHandle:
         self._validate_credentials(spec)
         devices = self._validate_devices(spec)
         with self._lock:
-            if spec.name in self._providers:
+            if spec.name in self._providers or spec.name in self._groups:
                 raise ValidationError(f"provider {spec.name!r} already registered")
             handle = ProviderHandle(spec=spec, devices=devices)
             handle.trace.add("validated")
@@ -103,6 +111,51 @@ class ProviderProxy:
     def all(self) -> list[ProviderHandle]:
         with self._lock:
             return list(self._providers.values())
+
+    # -- groups --------------------------------------------------------
+    def register_group(self, group) -> None:
+        """Register a ProviderGroup; its name becomes a logical bind target
+        and its members leave the direct-binding pool."""
+        with self._lock:
+            if group.name in self._providers or group.name in self._groups:
+                raise ValidationError(f"name {group.name!r} already registered")
+            for member in group.member_names:
+                h = self._providers.get(member)
+                if h is None:
+                    raise ValidationError(
+                        f"group {group.name!r}: member {member!r} is not a registered provider"
+                    )
+                if h.group is not None:
+                    raise ValidationError(
+                        f"group {group.name!r}: member {member!r} already in group {h.group!r}"
+                    )
+            for member in group.member_names:
+                self._providers[member].group = group.name
+            self._groups[group.name] = group
+
+    def get_group(self, name: str):
+        g = self._groups.get(name)
+        if g is None:
+            raise KeyError(f"unknown provider group {name!r}")
+        return g
+
+    def is_group(self, name: str) -> bool:
+        return name in self._groups
+
+    def groups(self) -> list:
+        with self._lock:
+            return list(self._groups.values())
+
+    def bind_targets(self) -> list:
+        """What binding policies may choose from: healthy *ungrouped*
+        providers plus routable groups (grouped members are reached only
+        through their group)."""
+        with self._lock:
+            targets: list = [
+                h for h in self._providers.values() if h.healthy and h.group is None
+            ]
+            targets.extend(g for g in self._groups.values() if g.routable())
+            return targets
 
     # ------------------------------------------------------------------
     @staticmethod

@@ -93,6 +93,9 @@ class Task(Future):
         self.max_retries = max_retries
         self.retries = 0
         self.provider: Optional[str] = provider
+        # logical group binding; provider holds the concrete member resolved
+        # at dispatch time (core/group.py) and may change on failover
+        self.group: Optional[str] = None
         self.pod_uid: Optional[str] = None
         self.trace = Trace()
         self._state_lock = threading.RLock()
@@ -183,6 +186,7 @@ def describe(task: Task) -> dict:
         "kind": task.kind,
         "resources": vars(task.resources),
         "provider": task.provider,
+        "group": task.group,
         "arch": task.arch,
         "shape": task.shape,
         "step_kind": task.step_kind,

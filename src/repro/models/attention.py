@@ -202,7 +202,9 @@ def _decode_attention_distributed(
         out = acc_g / jnp.maximum(l_g, 1e-37)[..., None]
         return out[:, None].astype(q.dtype)
 
-    fn = jax.shard_map(
+    from repro.compat import compat_shard_map
+
+    fn = compat_shard_map(
         local,
         mesh=mesh,
         in_specs=(
@@ -213,7 +215,6 @@ def _decode_attention_distributed(
             P(bspec),
         ),
         out_specs=P(bspec, None, None, None),
-        check_vma=False,
     )
     return fn(q, k_cache, v_cache, cache_positions, pos)
 

@@ -1,0 +1,294 @@
+"""Provider groups: balancing strategies, circuit breaker state machine,
+transparent failover, half-open recovery, registration validation."""
+import time
+
+import pytest
+
+from repro.core import (
+    BreakerState,
+    CircuitBreaker,
+    GroupExhausted,
+    Hydra,
+    ProviderSpec,
+    Task,
+)
+from repro.core.group import ProviderGroup, make_strategy
+from repro.core.provider import ValidationError
+
+
+def specs(*names, **kw):
+    return [ProviderSpec(name=n, concurrency=4, **kw) for n in names]
+
+
+@pytest.fixture
+def broker(tmp_path):
+    h = Hydra(pod_store="memory", workdir=str(tmp_path), tasks_per_pod=8)
+    yield h
+    h.shutdown(wait=False)
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_opens_after_consecutive_failures():
+    b = CircuitBreaker(failure_threshold=3, reset_timeout_s=60.0)
+    for _ in range(2):
+        b.record_failure()
+    assert b.state == BreakerState.CLOSED and b.allow()
+    b.record_failure()
+    assert b.state == BreakerState.OPEN and not b.allow()
+
+
+def test_breaker_success_resets_failure_streak():
+    b = CircuitBreaker(failure_threshold=2)
+    b.record_failure()
+    b.record_success()
+    b.record_failure()
+    assert b.state == BreakerState.CLOSED  # streak broken: still closed
+
+
+def test_breaker_trip_opens_immediately():
+    b = CircuitBreaker(failure_threshold=99)
+    b.trip()
+    assert b.state == BreakerState.OPEN and not b.allow()
+
+
+def test_breaker_half_open_probe_single_flight_then_close():
+    b = CircuitBreaker(failure_threshold=1, reset_timeout_s=0.02)
+    b.record_failure()
+    assert not b.allow()
+    time.sleep(0.03)
+    assert b.allow()  # the timed probe
+    assert b.state == BreakerState.HALF_OPEN
+    assert not b.allow()  # only one probe in flight
+    b.record_success()
+    assert b.state == BreakerState.CLOSED and b.allow()
+
+
+def test_breaker_release_probe_returns_ticket():
+    b = CircuitBreaker(failure_threshold=1, reset_timeout_s=0.02)
+    b.record_failure()
+    time.sleep(0.03)
+    assert b.allow()  # probe dispatched
+    b.release_probe()  # probe task finished elsewhere: it never ran
+    assert b.allow()  # ticket returned: next caller may probe
+    b.record_success()
+    assert b.state == BreakerState.CLOSED
+
+
+def test_breaker_half_open_failure_reopens():
+    b = CircuitBreaker(failure_threshold=1, reset_timeout_s=0.02)
+    b.record_failure()
+    time.sleep(0.03)
+    assert b.allow()
+    b.record_failure()
+    assert b.state == BreakerState.OPEN and not b.allow()
+
+
+# ---------------------------------------------------------------------------
+# Group construction + strategies
+# ---------------------------------------------------------------------------
+
+
+def test_group_registration_and_bind_targets(broker):
+    broker.register_group("pool", specs("g1", "g2", "g3"))
+    assert broker.proxy.is_group("pool")
+    names = {t.name for t in broker.proxy.bind_targets()}
+    assert names == {"pool"}  # members leave the direct-binding pool
+    assert broker.proxy.get("g1").group == "pool"
+
+
+def test_group_rejects_mixed_platforms(broker):
+    broker.register_provider(ProviderSpec(name="c1"))
+    broker.register_provider(ProviderSpec(name="h1", platform="hpc", connector="pilot"))
+    with pytest.raises(ValidationError):
+        ProviderGroup("bad", [broker.proxy.get("c1"), broker.proxy.get("h1")])
+
+
+def test_member_cannot_join_two_groups(broker):
+    broker.register_group("pool_a", specs("m1", "m2"))
+    with pytest.raises(ValidationError):
+        broker.register_group("pool_b", ["m1"])
+
+
+def test_group_name_collision_rejected(broker):
+    broker.register_provider(ProviderSpec(name="solo"))
+    with pytest.raises(ValidationError):
+        broker.register_group("solo", specs("x1", "x2"))
+
+
+def test_unknown_strategy_rejected():
+    with pytest.raises(ValidationError):
+        make_strategy("fastest_first")
+
+
+def test_failed_registration_rolls_back_members(broker):
+    """A failed register_group must not leak on-the-fly members into the
+    direct-binding pool."""
+    with pytest.raises(ValidationError):
+        broker.register_group("bad", specs("r1", "r2"), strategy="nope")
+    assert broker.proxy.bind_targets() == []
+    with pytest.raises(KeyError):
+        broker.proxy.get("r1")
+    broker.register_group("good", specs("r1", "r2"))  # names reusable now
+
+
+def test_round_robin_strategy_balances(broker):
+    group = broker.register_group("pool", specs("r1", "r2", "r3"))
+    picks = [group.select() for _ in range(9)]
+    assert {picks.count(m) for m in ("r1", "r2", "r3")} == {3}
+
+
+def test_weighted_strategy_prefers_capacity(broker):
+    big = ProviderSpec(name="big", concurrency=4, n_nodes=4)
+    small = ProviderSpec(name="small", concurrency=4, n_nodes=1)
+    group = broker.register_group("pool", [big, small], strategy="weighted")
+    picks = []
+    for _ in range(10):
+        m = group.select()
+        group.note_dispatch(m, 1)
+        picks.append(m)
+    assert picks.count("big") > picks.count("small")
+
+
+def test_least_loaded_strategy_fills_idle_member(broker):
+    group = broker.register_group("pool", specs("l1", "l2"), strategy="least_loaded")
+    group.note_dispatch("l1", 5)
+    assert group.select() == "l2"
+
+
+def test_select_excludes_failed_member_and_exhausts(broker):
+    group = broker.register_group("pool", specs("e1", "e2"))
+    group.mark_down("e1")
+    assert group.select() == "e2"  # e1's breaker is open
+    with pytest.raises(GroupExhausted):
+        group.select(exclude="e2")  # e1 down + e2 excluded -> nothing left
+    group.mark_down("e2")
+    with pytest.raises(GroupExhausted):
+        group.select()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: dispatch, failover, recovery
+# ---------------------------------------------------------------------------
+
+
+def test_group_workload_completes_and_balances(broker):
+    broker.register_group("pool", specs("b1", "b2"))
+    tasks = [Task(kind="noop") for _ in range(64)]
+    sub = broker.submit(tasks)
+    assert sub.wait(timeout=60)
+    assert sub.states == {"DONE": 64}
+    assert all(t.group == "pool" and t.provider in ("b1", "b2") for t in tasks)
+    rows = {r["member"]: r for r in broker.group_rows()}
+    assert rows["b1"]["dispatched"] > 0 and rows["b2"]["dispatched"] > 0
+    assert rows["b1"]["completed"] + rows["b2"]["completed"] == 64
+
+
+def test_group_failover_survives_member_death(broker):
+    """ISSUE acceptance: a 3-member group where one member dies mid-run must
+    finish ALL tasks with the breaker open on the dead member."""
+    group = broker.register_group("pool", specs("f1", "f2", "f3"))
+    tasks = [Task(kind="sleep", duration=0.005) for _ in range(120)]
+    sub = broker.submit(tasks)
+    broker.manager("f2").fail()  # ProviderDown mid-run
+    assert sub.wait(timeout=120)
+    assert sub.states == {"DONE": 120}
+    assert group.breaker_state("f2") == BreakerState.OPEN
+    # survivors absorbed the failed-over work
+    assert all(t.provider in ("f1", "f3") or t.tstate.value == "DONE" for t in tasks)
+    row = {r["member"]: r for r in broker.group_rows()}["f2"]
+    assert row["breaker"] == "OPEN" and row["trips"] >= 1
+
+
+def test_failover_is_transparent_to_policy(tmp_path):
+    """The binding policy only ever sees the logical group name."""
+    seen = []
+
+    h = Hydra(pod_store="memory", workdir=str(tmp_path), policy="load_aware")
+    orig_observe = h.policy.observe
+
+    def spy(provider, runtime_s):
+        seen.append(provider)
+        orig_observe(provider, runtime_s)
+
+    h.policy.observe = spy
+    h.register_group("pool", specs("p1", "p2"))
+    tasks = [Task(kind="sleep", duration=0.002) for _ in range(40)]
+    sub = h.submit(tasks)
+    h.manager("p1").fail()
+    assert sub.wait(timeout=60)
+    assert sub.states == {"DONE": 40}
+    assert set(seen) == {"pool"}  # member names never leak into the policy
+    h.shutdown(wait=False)
+
+
+def test_half_open_probe_recovers_member(broker):
+    # least_loaded is the strategy most sensitive to stale load counts on a
+    # downed member: recovery must not be starved by leftover `outstanding`
+    group = broker.register_group(
+        "pool", specs("h1", "h2"), strategy="least_loaded", reset_timeout_s=0.05
+    )
+    sub = broker.submit([Task(kind="noop") for _ in range(16)])
+    assert sub.wait(timeout=30)
+    broker.manager("h1").fail()
+    group.mark_down("h1")
+    assert group.breaker_state("h1") == BreakerState.OPEN
+    broker.manager("h1").recover()
+    time.sleep(0.06)  # reset window elapses -> next dispatch is the probe
+    sub2 = broker.submit([Task(kind="noop") for _ in range(16)])
+    assert sub2.wait(timeout=30)
+    assert sub2.states == {"DONE": 16}
+    deadline = time.time() + 5
+    while group.breaker_state("h1") != BreakerState.CLOSED and time.time() < deadline:
+        broker.submit([Task(kind="noop")]).wait(timeout=10)
+    assert group.breaker_state("h1") == BreakerState.CLOSED
+
+
+def test_group_exhausted_falls_back_to_standalone_provider(broker):
+    broker.register_group("pool", specs("x1", "x2"))
+    broker.register_provider(ProviderSpec(name="backup", concurrency=4))
+    tasks = [Task(kind="sleep", duration=0.005) for _ in range(60)]
+    sub = broker.submit(tasks)
+    broker.manager("x1").fail()
+    broker.manager("x2").fail()
+    assert sub.wait(timeout=120)
+    assert sub.states == {"DONE": 60}
+
+
+def test_elastic_remove_grouped_member(broker):
+    """remove_provider on a group member = permanent failover: the member
+    leaves the group for good (no half-open probes to a dead slot)."""
+    group = broker.register_group("pool", specs("d1", "d2", "d3"))
+    tasks = [Task(kind="sleep", duration=0.004) for _ in range(90)]
+    sub = broker.submit(tasks)
+    broker.remove_provider("d2")
+    assert sub.wait(timeout=120)
+    assert sub.states == {"DONE": 90}
+    assert "d2" not in group and group.member_names == ["d1", "d3"]
+
+
+def test_pilot_members_group(broker):
+    """Groups work over the HPC (pilot) connector too."""
+    members = [
+        ProviderSpec(name=n, platform="hpc", connector="pilot", concurrency=4)
+        for n in ("hpc1", "hpc2")
+    ]
+    broker.register_group("hpc_pool", members)
+    tasks = [Task(kind="noop") for _ in range(32)]
+    sub = broker.submit(tasks)
+    assert sub.wait(timeout=60)
+    assert sub.states == {"DONE": 32}
+
+
+def test_groups_and_standalone_mix(broker):
+    broker.register_group("pool", specs("mx1", "mx2"))
+    broker.register_provider(ProviderSpec(name="lone", concurrency=4))
+    tasks = [Task(kind="noop") for _ in range(48)]
+    sub = broker.submit(tasks)
+    assert sub.wait(timeout=60)
+    assert sub.states == {"DONE": 48}
+    bound = {t.group or t.provider for t in tasks}
+    assert bound <= {"pool", "lone"} and len(bound) == 2
