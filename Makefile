@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-full bench-groups
+.PHONY: test test-fast bench bench-full bench-groups bench-streaming
 
 test:  ## tier-1 verify (ROADMAP.md)
 	$(PY) -m pytest -x -q
@@ -20,3 +20,6 @@ bench-full:  ## paper-scale task counts
 
 bench-groups:  ## exp5 only: provider-group throughput + failover overhead
 	$(PY) -m benchmarks.exp5_groups
+
+bench-streaming:  ## exp6 only: streaming vs frontier DAG dispatch (800 instances)
+	$(PY) -m benchmarks.exp6_streaming --full

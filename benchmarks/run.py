@@ -25,7 +25,7 @@ def main() -> None:
     out = []
 
     from benchmarks import exp1_per_provider, exp2_cross_provider, exp3a_cross_platform
-    from benchmarks import exp3b_heterogeneous, exp4_facts, exp5_groups
+    from benchmarks import exp3b_heterogeneous, exp4_facts, exp5_groups, exp6_streaming
     from benchmarks import kernels_bench, roofline_report
 
     print("== Exp 1: per-provider scaling (OVH/TH/TPT, MCPP vs SCPP) ==")
@@ -52,6 +52,14 @@ def main() -> None:
     print("== Exp 5: provider groups (balanced TPT + failover OVH) ==")
     r5 = exp5_groups.main(full)
     out.append(_summary("exp5_groups", r5))
+
+    print("== Exp 6: streaming vs frontier DAG dispatch ==")
+    r6 = exp6_streaming.main(full)
+    streaming_rows = [r for r in r6 if r["mode"] == "streaming"]
+    mean_pod_ratio = sum(r["pod_ratio"] for r in streaming_rows) / max(len(streaming_rows), 1)
+    out.append(
+        f"exp6_streaming,{sum(r['n_submits'] for r in streaming_rows)},mean_pod_ratio={mean_pod_ratio:.2f}"
+    )
 
     print("== Kernel micro-benchmarks ==")
     for name, us, derived in kernels_bench.main(full):

@@ -1,8 +1,10 @@
 """Hydra broker core: the paper's contribution as a composable module."""
 from repro.core.broker import Hydra, Submission
+from repro.core.dispatcher import StreamingDispatcher
 from repro.core.fault import BreakerState, CircuitBreaker
 from repro.core.group import GroupExhausted, GroupMember, ProviderGroup
 from repro.core.managers.workflow import Workflow, WorkflowManager
+from repro.core.policy import NoEligibleProvider
 from repro.core.provider import ProviderProxy, ProviderSpec
 from repro.core.resource import ResourceRequest
 from repro.core.task import Resources, Task, TaskState
@@ -13,7 +15,9 @@ __all__ = [
     "GroupExhausted",
     "GroupMember",
     "Hydra",
+    "NoEligibleProvider",
     "ProviderGroup",
+    "StreamingDispatcher",
     "Submission",
     "Workflow",
     "WorkflowManager",

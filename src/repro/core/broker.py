@@ -30,6 +30,7 @@ import threading
 from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
 from typing import Optional
 
+from repro.core.dispatcher import StreamingDispatcher
 from repro.core.fault import StragglerWatchdog, clone_for_speculation
 from repro.core.group import GroupExhausted, ProviderGroup
 from repro.core.managers.compute import CaaSManager, ProviderDown
@@ -40,6 +41,7 @@ from repro.core.pod import Pod, make_store
 from repro.core.policy import Policy, make_policy
 from repro.core.provider import ProviderHandle, ProviderProxy, ProviderSpec
 from repro.core.task import Task, TaskState
+from repro.runtime.clock import guard_wait
 from repro.runtime.tracing import Metrics, Trace, compute_metrics, now
 
 
@@ -50,19 +52,40 @@ class Submission:
         self.tasks = tasks
         self.pods: list[Pod] = []
         self.run_trace = Trace()
+        self.dispatch_started = False  # pods handed to providers (rollback gate)
+        self.batch_id: Optional[str] = None  # set for dispatcher micro-batches
         self._broker = broker
+        self._all_done: Optional[threading.Event] = None  # lazy, built once
+        self._wait_lock = threading.Lock()
 
     def wait(self, timeout: Optional[float] = None) -> bool:
-        deadline = None if timeout is None else now() + timeout
-        for t in self.tasks:
-            remaining = None if deadline is None else max(0.0, deadline - now())
-            try:
-                t.exception(timeout=remaining)
-            except BaseException:  # TimeoutError / CancelledError / task error
-                pass
-            if deadline is not None and now() > deadline and not t.final:
-                return False
-        return True
+        """Block until every task's future resolves.  Completion callbacks
+        count down into one event (registered ONCE per submission, so a
+        polling ``while not sub.wait(1): ...`` loop does not accumulate
+        callbacks); the timeout is a *guard* measured on both the active
+        clock and real time (runtime/clock.guard_wait), so a virtual-clock
+        run neither hangs forever on a frozen clock nor times out spuriously
+        while real work is still executing."""
+        with self._wait_lock:
+            if self._all_done is None:
+                self._all_done = threading.Event()
+                unresolved = [t for t in self.tasks if not t.done()]
+                if not unresolved:
+                    self._all_done.set()
+                else:
+                    left = {"n": len(unresolved)}
+                    lock = threading.Lock()
+                    all_done = self._all_done
+
+                    def _one_done(_fut):
+                        with lock:
+                            left["n"] -= 1
+                            if left["n"] == 0:
+                                all_done.set()
+
+                    for t in unresolved:  # fires immediately if already resolved
+                        t.add_done_callback(_one_done)
+        return guard_wait(self._all_done, timeout)
 
     def metrics(self) -> Metrics:
         return compute_metrics(self.run_trace, self.tasks, self.pods)
@@ -86,6 +109,9 @@ class Hydra:
         enable_straggler_mitigation: bool = False,
         straggler_factor: float = 3.0,
         fail_fast: bool = False,
+        streaming: bool = False,
+        batch_window: float = 0.002,
+        max_batch: int = 256,
     ):
         self.workdir = workdir or tempfile.mkdtemp(prefix="hydra_")
         os.makedirs(self.workdir, exist_ok=True)
@@ -95,6 +121,12 @@ class Hydra:
         self.partitioning = partitioning
         self.tasks_per_pod = tasks_per_pod
         self.fail_fast = fail_fast
+        self.n_submits = 0  # full bind/partition/serialize/dispatch rounds
+        self.n_pods_total = 0  # cumulative: survives submission pruning
+        self.streaming = streaming
+        self._batch_window = batch_window
+        self._max_batch = max_batch
+        self._dispatcher: Optional[StreamingDispatcher] = None
         self.data = DataManager(os.path.join(self.workdir, "data"))
         self._managers: dict[str, object] = {}
         self._lock = threading.RLock()
@@ -110,6 +142,65 @@ class Hydra:
                 factor=straggler_factor,
             )
             self.watchdog.start()
+        if streaming:
+            self.dispatcher()
+
+    # ------------------------------------------------------------------
+    # Streaming dispatch (core/dispatcher.py): the ready-queue loop that
+    # micro-batches tasks across workflows and late-binds at dispatch time
+    # ------------------------------------------------------------------
+    def dispatcher(self) -> StreamingDispatcher:
+        """The broker's long-lived streaming loop (started on first use).
+        Lazy start does NOT flip ``self.streaming``: mode is an explicit
+        constructor choice, so one caller using dispatch() cannot silently
+        switch other WorkflowManagers sharing this broker into streaming."""
+        with self._lock:
+            if self._dispatcher is None:
+                self._dispatcher = StreamingDispatcher(
+                    self,
+                    batch_window=self._batch_window,
+                    max_batch=self._max_batch,
+                ).start()
+            return self._dispatcher
+
+    def dispatch(self, tasks: list[Task]) -> None:
+        """Feed ready tasks into the streaming dispatcher's queue."""
+        self.dispatcher().enqueue(tasks)
+
+    def idle_slots(self) -> int:
+        """Free execution slots across healthy bind targets: the streaming
+        dispatcher's backfill hint (group members report slots minus
+        outstanding load; ungrouped providers report their static slots)."""
+        total = 0
+        for target in self.proxy.bind_targets():
+            if isinstance(target, ProviderGroup):
+                total += target.idle_slots()
+            else:
+                total += max(1, target.spec.concurrency * target.spec.n_nodes)
+        return total
+
+    def stream_stats(self) -> dict:
+        """Dispatcher-side metrics + total pipeline rounds (exp6)."""
+        stats = self._dispatcher.stats() if self._dispatcher else {}
+        with self._lock:
+            stats["n_submits"] = self.n_submits
+            stats["n_pods"] = self.n_pods_total  # cumulative, prune-proof
+        return stats
+
+    def _prune_finished_submissions(self) -> None:
+        """Drop dispatcher-internal micro-batch submissions whose tasks have
+        all RESOLVED futures: a long-lived streaming broker must not retain
+        every batch (tasks + serialized pods + traces) forever.  Resolution,
+        not tstate-finality, is the gate — a retryable FAILED task is final
+        by tstate but still owned by the orphan sweep (_collect_orphans),
+        which scans these submissions to re-bind it.  Caller-created
+        submissions (batch_id is None) are kept — the caller owns them."""
+        with self._lock:
+            self._submissions = [
+                s
+                for s in self._submissions
+                if s.batch_id is None or not all(t.done() for t in s.tasks)
+            ]
 
     def _running_tasks(self) -> list[Task]:
         with self._lock:
@@ -226,48 +317,94 @@ class Hydra:
         tasks: list[Task],
         partitioning: Optional[str] = None,
         tasks_per_pod: Optional[int] = None,
+        batch_id: Optional[str] = None,
     ) -> Submission:
         model = partitioning or self.partitioning
         tpp = tasks_per_pod or self.tasks_per_pod
         sub = Submission(tasks, self)
         with self._lock:
             self._submissions.append(sub)
-        rt = sub.run_trace
+            self.n_submits += 1
+            prune_due = batch_id is not None and self.n_submits % 32 == 0
+        if prune_due:
+            self._prune_finished_submissions()
+        try:
+            return self._submit_pipeline(sub, tasks, model, tpp, batch_id)
+        except BaseException:
+            # a failed pipeline round (e.g. transient full outage seen by the
+            # streaming dispatcher) must not leave a half-built submission in
+            # the metrics/orphan-sweep lists: the caller owns the retry.
+            # Once the dispatch phase started, pods may already be running on
+            # providers — the submission must then STAY registered so the
+            # orphan sweep can still find those tasks.
+            with self._lock:
+                if not sub.dispatch_started and sub in self._submissions:
+                    self._submissions.remove(sub)
+                    self.n_submits -= 1
+            raise
 
-        # -- bind ----------------------------------------------------------
+    def _submit_pipeline(
+        self,
+        sub: Submission,
+        tasks: list[Task],
+        model: str,
+        tpp: int,
+        batch_id: Optional[str],
+    ) -> Submission:
+        rt = sub.run_trace
+        sub.batch_id = batch_id
+
+        # -- bind (late: provider/group health is read NOW, at dispatch) ---
         rt.add("bind_start")
         targets = self.proxy.bind_targets()
         if not targets:
             raise RuntimeError("no healthy providers registered")
         by_provider: dict[str, list[Task]] = {}
         names = self.policy.bind_bulk(tasks, targets)
-        for t, name in zip(tasks, names):
-            t.provider = name
-            t.group = name if self.proxy.is_group(name) else None
-            t.advance(TaskState.BOUND)
-            by_provider.setdefault(name, []).append(t)
-        rt.add("bind_done")
+        try:
+            for t, name in zip(tasks, names):
+                t.provider = name
+                t.group = name if self.proxy.is_group(name) else None
+                t.advance(TaskState.BOUND)
+                by_provider.setdefault(name, []).append(t)
+            rt.add("bind_done")
 
-        # -- partition -------------------------------------------------------
-        rt.add("partition_start")
-        pods: list[Pod] = []
-        for name, ts in by_provider.items():
-            ppods = partition(ts, name, model=model, tasks_per_pod=tpp)
-            for p in ppods:
-                for t in p.tasks:
-                    t.advance(TaskState.PARTITIONED)
-            pods.extend(ppods)
-        sub.pods.extend(pods)
-        rt.add("partition_done")
+            # -- partition ---------------------------------------------------
+            rt.add("partition_start")
+            pods: list[Pod] = []
+            for name, ts in by_provider.items():
+                ppods = partition(ts, name, model=model, tasks_per_pod=tpp)
+                for p in ppods:
+                    p.batch_id = batch_id
+                    for t in p.tasks:
+                        t.advance(TaskState.PARTITIONED)
+                pods.extend(ppods)
+            sub.pods.extend(pods)
+            with self._lock:
+                self.n_pods_total += len(pods)
+            rt.add("partition_done")
 
-        # -- serialize ---------------------------------------------------------
-        rt.add("serialize_start")
-        for p in pods:
-            self.store.serialize(p)
-        rt.add("serialize_done")
+            # -- serialize ---------------------------------------------------
+            rt.add("serialize_start")
+            for p in pods:
+                self.store.serialize(p)
+            rt.add("serialize_done")
+        except BaseException as e:
+            # nothing reached a provider yet: fully reverse the batch's load
+            # accounting (bind_bulk accounted for EVERY task, including ones
+            # whose provider attribute was never updated) and mark the
+            # exception so the dispatcher's retry does not release twice
+            for t, name in zip(tasks, names):
+                self.policy.unbind(t, name)
+            try:
+                e._hydra_load_released = True
+            except AttributeError:  # exceptions with __slots__
+                pass
+            raise
 
         # -- bulk submit (concurrently across providers) -----------------------
         rt.add("submit_start")
+        sub.dispatch_started = True
         per_provider: dict[str, list[Pod]] = {}
         for p in pods:
             per_provider.setdefault(p.provider, []).append(p)
@@ -563,6 +700,8 @@ class Hydra:
     # ------------------------------------------------------------------
     def shutdown(self, wait: bool = True):
         """Graceful teardown of every instantiated resource (paper §3.2)."""
+        if self._dispatcher is not None:
+            self._dispatcher.stop(wait=wait)
         if self.watchdog:
             self.watchdog.stop()
         with self._lock:

@@ -1,0 +1,263 @@
+"""Streaming DAG dispatcher: micro-batched, late-bound, backfilling.
+
+Frontier-mode workflow execution (the paper's Argo analogue) turns *every*
+readiness event into a fresh full-pipeline ``broker.submit()`` — one
+bind/partition/serialize/dispatch round per micro-frontier, often a
+single-task pod.  Per-submission overhead therefore grows with
+DAG depth x instance count, the opposite of the paper's near-constant
+broker-overhead claim (§5.4, §6).
+
+The streaming dispatcher inverts that: ONE long-lived loop owns a
+ready-queue fed by every running workflow, and
+
+  * **micro-batches**: ready tasks arriving within ``batch_window`` (measured
+    on the active clock, so virtual-time tests stay fast) coalesce into one
+    submission of up to ``max_batch`` tasks — across ALL workflow instances,
+    so 800 one-task frontiers become a handful of well-filled pods;
+  * **late-binds**: the binding policy and the provider-group breaker state
+    (core/group.py) are consulted when the batch *dispatches*, not when the
+    DAG was built — a member that died a millisecond ago is already out of
+    rotation;
+  * **backfills**: batches are drained shallow-DAG-depth-first and sized
+    against the pools' ``idle_slots()`` hint, so when the shallow frontier
+    is too small to fill idle capacity, ready tasks from deeper workflows
+    ride along instead of waiting for their instance's "turn".
+
+``WorkflowManager`` (core/managers/workflow.py) shrinks to a dependency
+tracker that feeds this queue.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+from typing import TYPE_CHECKING, Optional
+
+from repro.core.policy import NoEligibleProvider
+from repro.core.task import Task, TaskState
+from repro.runtime.clock import get_clock
+from repro.runtime.tracing import Counter, Trace
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.broker import Hydra
+
+_batch_ids = Counter("batch")
+
+
+class StreamingDispatcher:
+    """The broker's long-lived ready-queue -> micro-batch -> submit loop."""
+
+    def __init__(
+        self,
+        broker: "Hydra",
+        batch_window: float = 0.002,
+        max_batch: int = 256,
+        min_batch: int = 32,
+        max_consecutive_failures: int = 500,
+    ):
+        self.broker = broker
+        self.batch_window = batch_window
+        self.max_batch = max(1, max_batch)
+        self.min_batch = max(1, min(min_batch, self.max_batch))
+        # back-to-back dispatch failures (~10ms backoff each) before a
+        # persistent outage is surfaced onto the tasks instead of retried
+        self.max_consecutive_failures = max_consecutive_failures
+        self.trace = Trace()
+        # ready queue: a heap keyed by (depth, arrival) so the shallow-first
+        # drain is O(log n) per task instead of a full re-sort per round
+        self._pending: list[tuple[int, int, Task]] = []
+        self._queued: set[str] = set()  # uids in the heap (dedup guard)
+        self._seq = 0
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._idle = threading.Event()
+        self._idle.set()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        # metrics: the streaming-vs-frontier story in benchmarks/exp6
+        self.batches = 0
+        self.tasks_dispatched = 0
+        self.retry_backoffs = 0
+        self.loop_errors = 0
+        self._consecutive_failures = 0  # current retry streak (reset on success)
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> "StreamingDispatcher":
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._loop, daemon=True, name="hydra-stream"
+            )
+            self._thread.start()
+            self.trace.add("dispatcher_started")
+        return self
+
+    def stop(self, wait: bool = True) -> None:
+        self._stop.set()
+        self._wake.set()
+        if wait and self._thread is not None:
+            self._thread.join(timeout=5.0)
+        self.trace.add("dispatcher_stopped")
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive() and not self._stop.is_set()
+
+    # -- the ready queue -------------------------------------------------
+    def enqueue(self, tasks: list[Task]) -> None:
+        """Feed ready tasks (deps satisfied) from any workflow or caller."""
+        if not tasks:
+            return
+        with self._lock:
+            added = False
+            for t in tasks:
+                if t.uid in self._queued:
+                    continue
+                self._queued.add(t.uid)
+                heapq.heappush(self._pending, (t.depth, self._seq, t))
+                self._seq += 1
+                added = True
+            if added:
+                self._idle.clear()
+        self._wake.set()
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until the queue is empty and no batch is in flight (tests)."""
+        return self._idle.wait(timeout)
+
+    # -- the loop --------------------------------------------------------
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            if not self.pending():
+                with self._lock:
+                    if not self._pending:  # recheck under the lock
+                        self._wake.clear()
+                        self._idle.set()
+                self._wake.wait(timeout=0.05)
+                continue
+            # open the micro-batch window: readiness events from other
+            # workflows coalesce here (clock-aware: virtual windows are free)
+            clock = get_clock()
+            if self.batch_window > 0:
+                clock.sleep(self.batch_window)
+            try:
+                # hold the clock only across the drain: submit() may sleep
+                # modeled provider latencies on this same clock, and hold()'s
+                # contract forbids sleeping under a hold (deadlock valve)
+                with clock.hold():
+                    batch = self._take_batch()
+                if batch:
+                    self._dispatch(batch)
+            except Exception:
+                # the loop is the broker's lifeline: a raced completion or a
+                # recovery-path error must never kill the dispatcher thread.
+                # Back off so a persistent error cannot become a hot spin.
+                self.loop_errors += 1
+                self.trace.add("loop_error")
+                self._stop.wait(0.05)
+
+    def _take_batch(self) -> list[Task]:
+        """Drain up to the batch budget, shallow DAG depth first (backfill:
+        deeper-workflow tasks fill whatever capacity the frontier leaves)."""
+        budget = min(self.max_batch, max(self.broker.idle_slots(), self.min_batch))
+        batch: list[Task] = []
+        with self._lock:
+            while self._pending and len(batch) < budget:
+                _, _, t = heapq.heappop(self._pending)
+                self._queued.discard(t.uid)
+                if t.final:  # canceled while queued
+                    continue
+                batch.append(t)
+        return batch
+
+    def _dispatch(self, batch: list[Task]) -> None:
+        batch_id = _batch_ids.next()
+        try:
+            sub = self.broker.submit(
+                batch,
+                partitioning=self.broker.partitioning,
+                tasks_per_pod=self.broker.tasks_per_pod,
+                batch_id=batch_id,
+            )
+        except NoEligibleProvider:
+            # late binding found an unplaceable task (bind_bulk validates
+            # eligibility before any stateful binding, so no load accounting
+            # leaked): fail only the offenders, stream the rest through
+            placeable = []
+            targets = self.broker.proxy.bind_targets()
+            if not targets:  # raced into a full outage: transient, not fatal
+                self._retry(batch)
+                return
+            for t in batch:
+                try:
+                    self.broker.policy._eligible(t, targets)
+                    placeable.append(t)
+                except NoEligibleProvider as exc:
+                    self._fail_task(t, exc)  # surface the typed error
+            self.retry_backoffs += 1
+            if placeable:
+                self.enqueue(placeable)
+            return
+        except Exception as exc:
+            self._retry(batch, exc)
+            return
+        self.batches += 1
+        self.tasks_dispatched += len(batch)
+        self._consecutive_failures = 0
+        self.trace.add(f"batch:{batch_id}:{len(batch)}:{len(sub.pods)}")
+
+    def _retry(self, batch: list[Task], exc: Optional[BaseException] = None) -> None:
+        """Transient dispatch failure (e.g. every provider momentarily
+        unhealthy): requeue what is safe to re-bind, back off briefly.
+        Tasks the failed round already handed to a provider (SUBMITTED /
+        RUNNING) are NOT requeued — they either finish there or re-enter
+        through the broker's fault machinery."""
+        self.retry_backoffs += 1
+        self._consecutive_failures += 1
+        self.trace.add("dispatch_retry")
+        # pipeline aborts before dispatch release the whole batch's load
+        # accounting broker-side (exc carries the marker); only a failure
+        # AFTER dispatch started leaves bound-but-undelivered tasks to us
+        released = exc is not None and getattr(exc, "_hydra_load_released", False)
+        requeueable = []
+        for t in batch:
+            if t.final or t.tstate not in (TaskState.NEW, TaskState.BOUND, TaskState.PARTITIONED):
+                continue
+            if not released and t.tstate != TaskState.NEW:
+                # bound in the failed round but never reached a provider:
+                # release the policy's load accounting before re-binding
+                self.broker.policy.unbind(t)
+            requeueable.append(t)
+        if self._consecutive_failures > self.max_consecutive_failures and exc is not None:
+            # a persistent outage (counter resets on any success): surface
+            # instead of spinning forever
+            for t in requeueable:
+                self._fail_task(t, exc)
+            return
+        self.enqueue(requeueable)
+        self._stop.wait(0.01)
+
+    def _fail_task(self, t: Task, exc: BaseException) -> None:
+        """Terminal failure: move tstate to a final state FIRST (workflow
+        completion checks ``all(t.final)``), then resolve the future."""
+        t.try_advance(TaskState.CANCELED)
+        try:
+            if not t.done():
+                t.set_exception(exc)
+        except Exception:  # raced with a concurrent resolution: already final
+            pass
+
+    # -- metrics ---------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "batches": self.batches,
+            "tasks_dispatched": self.tasks_dispatched,
+            "mean_batch_size": round(self.tasks_dispatched / max(self.batches, 1), 2),
+            "pending": self.pending(),
+            "retry_backoffs": self.retry_backoffs,
+            "loop_errors": self.loop_errors,
+            "batch_window_s": self.batch_window,
+            "max_batch": self.max_batch,
+        }

@@ -27,11 +27,11 @@ from __future__ import annotations
 
 import statistics
 import threading
-import time
 from enum import Enum
 from typing import Callable, Optional
 
 from repro.core.task import Task, TaskState
+from repro.runtime.clock import get_clock
 from repro.runtime.tracing import now
 
 
@@ -180,7 +180,9 @@ class StragglerWatchdog:
             self.completed_runtimes.append(runtime_s)
 
     def _loop(self):
-        while not self._stop.wait(self.interval_s):
+        # clock-aware tick: under a VirtualClock the watchdog scans on
+        # virtual intervals, so straggler thresholds fire deterministically
+        while not get_clock().wait_event(self._stop, self.interval_s):
             with self._lock:
                 if len(self.completed_runtimes) < self.min_samples:
                     continue

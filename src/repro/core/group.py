@@ -56,6 +56,7 @@ class GroupMember:
 
     name: str
     weight: float = 1.0
+    slots: int = 1  # concurrent task slots (spec concurrency x nodes)
     breaker: CircuitBreaker = field(default_factory=CircuitBreaker)
     outstanding: int = 0  # tasks dispatched, not yet completed/failed
     dispatched: int = 0
@@ -160,6 +161,7 @@ class ProviderGroup:
             self._members[h.name] = GroupMember(
                 name=h.name,
                 weight=float(cap.cpus + cap.accels),
+                slots=max(1, h.spec.concurrency * h.spec.n_nodes),
                 breaker=CircuitBreaker(
                     failure_threshold=failure_threshold,
                     reset_timeout_s=reset_timeout_s,
@@ -201,6 +203,18 @@ class ProviderGroup:
     def routable(self) -> bool:
         """Is the group a valid bind target right now?"""
         return len(self.available_members()) >= max(1, self.min_healthy)
+
+    def idle_slots(self) -> int:
+        """Free concurrent-execution slots across breaker-available members.
+
+        A *hint* for the streaming dispatcher's backfill sizing (how much
+        ready work the pool can absorb right now), not an admission limit —
+        members queue excess work internally."""
+        with self._lock:
+            members = list(self._members.values())
+        return sum(
+            max(0, m.slots - m.outstanding) for m in members if m.breaker.available()
+        )
 
     # -- dispatch-time member resolution ---------------------------------
     def select(self, exclude: Optional[str] = None) -> str:

@@ -15,13 +15,13 @@ device slice.
 from __future__ import annotations
 
 import threading
-import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Optional
 
 from repro.core.pod import Pod
 from repro.core.provider import ProviderHandle
 from repro.core.task import Task, TaskState
+from repro.runtime.clock import get_clock
 
 
 class ProviderDown(RuntimeError):
@@ -171,7 +171,7 @@ class CaaSManager:
         if self.down:
             raise ProviderDown(self.handle.name)
         if self.spec.submit_latency_s:
-            time.sleep(self.spec.submit_latency_s)  # modeled API round-trip
+            get_clock().sleep(self.spec.submit_latency_s)  # modeled API round-trip
         futures = []
         for pod in pods:
             for t in pod.tasks:
@@ -184,7 +184,7 @@ class CaaSManager:
     def _run_pod(self, pod: Pod):
         pod.trace.add("env_setup_start")
         if self.spec.env_setup_s:
-            time.sleep(self.spec.env_setup_s * (1 if pod.model != "scpp" else 1.0))
+            get_clock().sleep(self.spec.env_setup_s * (1 if pod.model != "scpp" else 1.0))
         pod.trace.add("env_setup_done")
         try:
             for t in pod.tasks:
@@ -231,7 +231,7 @@ class CaaSManager:
         if task.kind == "noop":
             return None
         if task.kind == "sleep":
-            time.sleep(task.duration)
+            get_clock().sleep(task.duration)
             return None
         if task.kind == "callable":
             return task.fn() if task.fn else None

@@ -9,13 +9,13 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from typing import Any, Callable, Optional
 
 from repro.core.managers.compute import COMPUTE_RUNTIME, ProviderDown
 from repro.core.pod import Pod
 from repro.core.provider import ProviderHandle
 from repro.core.task import Task, TaskState
+from repro.runtime.clock import get_clock
 from repro.runtime.tracing import Trace
 
 
@@ -47,7 +47,7 @@ class PilotManager:
     def _acquire_pilot(self):
         self.trace.add("pilot_queue_start")
         if self.spec.queue_delay_s:
-            time.sleep(self.spec.queue_delay_s)  # modeled batch queue wait
+            get_clock().sleep(self.spec.queue_delay_s)  # modeled batch queue wait
         self.trace.add("pilot_active")
         for i in range(self.spec.concurrency):
             w = threading.Thread(
@@ -90,7 +90,7 @@ class PilotManager:
         if self.down:
             raise ProviderDown(self.handle.name)
         if self.spec.submit_latency_s:
-            time.sleep(self.spec.submit_latency_s)
+            get_clock().sleep(self.spec.submit_latency_s)
         for pod in pods:
             pod.trace.add("env_setup_start")
             pod.trace.add("env_setup_done")  # pilot env already standing
@@ -129,7 +129,7 @@ class PilotManager:
             if task.kind == "noop":
                 result = None
             elif task.kind == "sleep":
-                time.sleep(task.duration)
+                get_clock().sleep(task.duration)
                 result = None
             elif task.kind == "callable":
                 result = task.fn() if task.fn else None

@@ -33,6 +33,9 @@ class Pod:
         self.trace = Trace()
         self.serialized: Optional[bytes] = None
         self.path: Optional[str] = None
+        # micro-batch provenance: which streaming-dispatcher batch coalesced
+        # this pod (None for classic frontier-mode submissions)
+        self.batch_id: Optional[str] = None
         for t in tasks:
             t.pod_uid = self.uid
 
@@ -45,6 +48,7 @@ class Pod:
             "uid": self.uid,
             "provider": self.provider,
             "model": self.model,
+            "batch_id": self.batch_id,
             "tasks": [describe(t) for t in self.tasks],
         }
 

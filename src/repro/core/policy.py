@@ -23,22 +23,62 @@ from repro.core.provider import ProviderHandle
 from repro.core.task import Task
 
 
+class NoEligibleProvider(RuntimeError):
+    """No registered target can fit the task's resource requirements.
+
+    A typed subclass so callers that bind *batches* late (the streaming
+    dispatcher in core/dispatcher.py) can fail exactly the offending task
+    and keep dispatching the rest of the batch, instead of aborting the
+    whole submission on one oversized task."""
+
+    def __init__(self, task: Task):
+        self.task = task
+        super().__init__(
+            f"no provider can fit task {task.uid} requiring {vars(task.resources)}"
+        )
+
+
 class Policy:
     name = "base"
 
     def bind(self, task: Task, providers: list) -> str:
         """providers: bind targets — ProviderHandle or ProviderGroup."""
+        return self._choose(task, self._eligible(task, providers))
+
+    def _choose(self, task: Task, ok: list) -> str:
+        """Pick among pre-validated eligible targets (policy-specific)."""
         raise NotImplementedError
 
     def bind_bulk(self, tasks: list[Task], providers: list) -> list[str]:
-        """Vectorized binding (§Perf): one eligibility pass for homogeneous
-        spans instead of a per-task policy call.  Default falls back to the
-        per-task path; policies may override."""
-        return [self.bind(t, providers) for t in tasks]
+        """Vectorized binding (§Perf): one eligibility pass per distinct
+        (resources, pin) signature instead of a per-task scan; policies may
+        override.
+
+        Atomic with respect to stateful policies: eligibility is validated
+        for the WHOLE batch before any _choose mutates load accounting, so a
+        NoEligibleProvider raise leaves outstanding/EWMA state untouched and
+        the caller can safely re-bind the placeable remainder."""
+        sig_cache: dict = {}
+        eligible = []
+        for t in tasks:
+            sig = (t.pinned_provider, t.resources.cpus, t.resources.accels, t.resources.memory_mb)
+            ok = sig_cache.get(sig)
+            if ok is None:
+                ok = self._eligible(t, providers)
+                sig_cache[sig] = ok
+            eligible.append(ok)
+        return [self._choose(t, ok) for t, ok in zip(tasks, eligible)]
 
     def observe(self, provider: str, runtime_s: float) -> None:
         """Runtime feedback hook (used by adaptive policies).  ``provider``
         is the logical bound name: a group name for group-bound tasks."""
+
+    def unbind(self, task: Task, name: Optional[str] = None) -> None:
+        """Undo load accounting for a task that was bound but never made it
+        to a provider (pipeline aborts and the streaming dispatcher's retry
+        path re-bind such tasks: without this hook stateful policies would
+        double-count).  ``name`` overrides the bound name for tasks whose
+        provider attribute was never updated (mid-bind aborts)."""
 
     def _eligible(self, task: Task, providers: list) -> list:
         """Targets that can fit the task (a pin may name a group too)."""
@@ -48,9 +88,7 @@ class Policy:
                 return pin
         ok = [p for p in providers if task.resources.fits(p.spec.capacity())]
         if not ok:
-            raise RuntimeError(
-                f"no provider can fit task {task.uid} requiring {vars(task.resources)}"
-            )
+            raise NoEligibleProvider(task)
         return ok
 
 
@@ -61,28 +99,11 @@ class RoundRobinPolicy(Policy):
         self._n = 0
         self._lock = threading.Lock()
 
-    def bind(self, task: Task, providers: list[ProviderHandle]) -> str:
-        ok = self._eligible(task, providers)
+    def _choose(self, task: Task, ok: list) -> str:
         with self._lock:
             choice = ok[self._n % len(ok)]
             self._n += 1
         return choice.name
-
-    def bind_bulk(self, tasks: list[Task], providers: list[ProviderHandle]) -> list[str]:
-        """One eligibility check per distinct (resources, pin) signature;
-        round-robin assignment in a single locked pass."""
-        sig_cache: dict = {}
-        out = []
-        with self._lock:
-            for t in tasks:
-                sig = (t.pinned_provider, t.resources.cpus, t.resources.accels, t.resources.memory_mb)
-                ok = sig_cache.get(sig)
-                if ok is None:
-                    ok = self._eligible(t, providers)
-                    sig_cache[sig] = ok
-                out.append(ok[self._n % len(ok)].name)
-                self._n += 1
-        return out
 
 
 class CapabilityPolicy(Policy):
@@ -91,8 +112,7 @@ class CapabilityPolicy(Policy):
 
     name = "capability"
 
-    def bind(self, task: Task, providers: list[ProviderHandle]) -> str:
-        ok = self._eligible(task, providers)
+    def _choose(self, task: Task, ok: list) -> str:
         if task.resources.accels > 0:
             return max(ok, key=lambda p: p.spec.capacity().accels).name
         return max(ok, key=lambda p: p.spec.capacity().cpus).name
@@ -107,8 +127,7 @@ class LoadAwarePolicy(Policy):
         self.outstanding: dict[str, int] = defaultdict(int)
         self._lock = threading.Lock()
 
-    def bind(self, task: Task, providers: list[ProviderHandle]) -> str:
-        ok = self._eligible(task, providers)
+    def _choose(self, task: Task, ok: list) -> str:
         with self._lock:
             choice = min(ok, key=lambda p: self.outstanding[p.name])
             self.outstanding[choice.name] += 1
@@ -117,6 +136,12 @@ class LoadAwarePolicy(Policy):
     def observe(self, provider: str, runtime_s: float) -> None:
         with self._lock:
             self.outstanding[provider] = max(0, self.outstanding[provider] - 1)
+
+    def unbind(self, task: Task, name: Optional[str] = None) -> None:
+        name = name or task.group or task.provider
+        if name:
+            with self._lock:
+                self.outstanding[name] = max(0, self.outstanding[name] - 1)
 
 
 class AdaptivePolicy(Policy):
@@ -134,8 +159,7 @@ class AdaptivePolicy(Policy):
         self.outstanding: dict[str, int] = defaultdict(int)
         self._lock = threading.Lock()
 
-    def bind(self, task: Task, providers: list[ProviderHandle]) -> str:
-        ok = self._eligible(task, providers)
+    def _choose(self, task: Task, ok: list) -> str:
         with self._lock:
             def score(p: ProviderHandle) -> float:
                 rate = 1.0 / max(self.ewma.get(p.name, 1e-3), 1e-6)
@@ -153,6 +177,13 @@ class AdaptivePolicy(Policy):
                 runtime_s if cur is None else (1 - self.alpha) * cur + self.alpha * runtime_s
             )
             self.outstanding[provider] = max(0, self.outstanding[provider] - 1)
+
+    def unbind(self, task: Task, name: Optional[str] = None) -> None:
+        """Load release only — no EWMA update: the task never ran."""
+        name = name or task.group or task.provider
+        if name:
+            with self._lock:
+                self.outstanding[name] = max(0, self.outstanding[name] - 1)
 
 
 POLICIES = {

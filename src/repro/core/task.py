@@ -97,6 +97,11 @@ class Task(Future):
         # at dispatch time (core/group.py) and may change on failover
         self.group: Optional[str] = None
         self.pod_uid: Optional[str] = None
+        # streaming-dispatcher scheduling hints (core/dispatcher.py): DAG
+        # depth orders micro-batches so shallow (critical-path-upstream)
+        # tasks bind first and deeper-workflow tasks backfill idle capacity
+        self.depth: int = 0
+        self.workflow: Optional[str] = None
         self.trace = Trace()
         self._state_lock = threading.RLock()
         self._tstate = TaskState.NEW

@@ -1,0 +1,286 @@
+"""Clock abstraction: wall time for production, virtual time for tests.
+
+Every timestamp and every timed wait in the broker core goes through the
+*active clock* (``get_clock()``):
+
+  * ``runtime/tracing.now`` stamps trace events,
+  * ``core/fault.py`` breaker reset windows and the straggler watchdog tick,
+  * the managers' modeled latencies (submit round-trips, env bring-up,
+    HPC queue waits) and ``sleep`` tasks,
+  * the streaming dispatcher's micro-batch window (``core/dispatcher.py``).
+
+``WallClock`` is the default: ``time.perf_counter`` + ``time.sleep``.
+
+``VirtualClock`` decouples scheduler time from wall time so that DAG
+scheduling scenarios with thousands of multi-second sleep tasks run in
+(real) milliseconds, deterministically enough for property tests: virtual
+time only moves when the auto-advancer jumps it to the earliest pending
+deadline, so every sleeper wakes at *exactly* its requested deadline and
+trace timestamps are exact virtual instants rather than noisy wall times.
+
+Threading model: sleepers park on one condition variable keyed by a heap of
+deadlines.  A daemon auto-advancer polls (real time); once the pending
+deadline set has been stable for ``stability_polls`` consecutive polls --
+giving in-flight threads a grace window to reach their ``sleep()`` call --
+it jumps ``now`` to the earliest deadline and wakes everyone.  Tests that
+want full manual control pass ``auto_advance=False`` and call ``advance``.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+from contextlib import contextmanager
+from typing import Optional
+
+
+class Clock:
+    """Interface: the broker core only ever uses these four methods."""
+
+    name = "base"
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def sleep(self, duration: float) -> None:
+        raise NotImplementedError
+
+    def wait_event(self, event: threading.Event, timeout: Optional[float] = None) -> bool:
+        """``event.wait(timeout)`` with the timeout measured on THIS clock."""
+        raise NotImplementedError
+
+    @contextmanager
+    def hold(self):
+        """Scoped advancement barrier: while held, a virtual clock will not
+        auto-advance (no-op on wall clocks).  The streaming dispatcher holds
+        the clock while draining/dispatching a batch so virtual time cannot
+        jump while readiness events are mid-flight between threads.  Never
+        ``sleep()`` on the same clock inside a hold — the advancer only
+        honours holds for a bounded number of polls (liveness valve), so a
+        sleep-under-hold degrades to slow ticks instead of deadlock."""
+        yield
+
+    def close(self) -> None:
+        pass
+
+
+class WallClock(Clock):
+    name = "wall"
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def sleep(self, duration: float) -> None:
+        if duration > 0:
+            time.sleep(duration)
+
+    def wait_event(self, event: threading.Event, timeout: Optional[float] = None) -> bool:
+        return event.wait(timeout)
+
+
+class VirtualClock(Clock):
+    name = "virtual"
+
+    def __init__(
+        self,
+        start: float = 0.0,
+        auto_advance: bool = True,
+        poll_s: float = 0.0005,
+        stability_polls: int = 2,
+    ):
+        self._now = float(start)
+        self._cond = threading.Condition()
+        self._sleepers: list[float] = []  # heap of pending virtual deadlines
+        self._holds = 0  # active hold() scopes: advancement barrier
+        self._closed = False
+        self._poll_s = poll_s
+        self._stability_polls = max(1, stability_polls)
+        self._stop = threading.Event()
+        self._advancer: Optional[threading.Thread] = None
+        self.advances = 0  # ticks performed (observability/tests)
+        if auto_advance:
+            self._advancer = threading.Thread(
+                target=self._advance_loop, daemon=True, name="virtual-clock"
+            )
+            self._advancer.start()
+
+    # -- reading / driving time ----------------------------------------
+    def now(self) -> float:
+        with self._cond:
+            return self._now
+
+    def advance(self, dt: float) -> float:
+        """Manually move time forward and wake any due sleepers."""
+        with self._cond:
+            self._now += max(0.0, dt)
+            self._cond.notify_all()
+            return self._now
+
+    def advance_to(self, t: float) -> float:
+        with self._cond:
+            self._now = max(self._now, t)
+            self._cond.notify_all()
+            return self._now
+
+    def pending_deadlines(self) -> int:
+        with self._cond:
+            return len(self._sleepers)
+
+    # -- virtual waiting -------------------------------------------------
+    def sleep(self, duration: float) -> None:
+        if duration <= 0:
+            return
+        with self._cond:
+            if self._closed:
+                return
+            deadline = self._now + duration
+            heapq.heappush(self._sleepers, deadline)
+            while self._now < deadline and not self._closed:
+                # the real-time timeout is a liveness guard only; wakeups
+                # come from advance()/the auto-advancer notifying the cond
+                self._cond.wait(timeout=0.05)
+            self._drop_passed()
+
+    def wait_event(self, event: threading.Event, timeout: Optional[float] = None) -> bool:
+        if timeout is None:
+            return event.wait()
+        with self._cond:
+            deadline = self._now + timeout
+            heapq.heappush(self._sleepers, deadline)
+            try:
+                while True:
+                    if event.is_set():
+                        return True
+                    if self._now >= deadline or self._closed:
+                        return event.is_set()
+                    self._cond.wait(timeout=0.01)
+            finally:
+                # withdraw our deadline if time never reached it (event won)
+                if deadline in self._sleepers:
+                    self._sleepers.remove(deadline)
+                    heapq.heapify(self._sleepers)
+                self._drop_passed()
+
+    def _drop_passed(self) -> None:
+        # callers hold self._cond
+        while self._sleepers and self._sleepers[0] <= self._now:
+            heapq.heappop(self._sleepers)
+
+    @contextmanager
+    def hold(self):
+        with self._cond:
+            self._holds += 1
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._holds = max(0, self._holds - 1)
+
+    # -- auto-advancer ---------------------------------------------------
+    def _advance_loop(self) -> None:
+        stable = 0
+        held_polls = 0
+        last_sig: Optional[tuple] = None
+        while not self._stop.wait(self._poll_s):
+            with self._cond:
+                self._drop_passed()
+                if not self._sleepers:
+                    stable, last_sig = 0, None
+                    continue
+                if self._holds > 0 and held_polls < 100:
+                    # a dispatch round is mid-flight: defer the tick
+                    # (bounded: ~100 polls, the sleep-under-hold valve)
+                    held_polls += 1
+                    stable, last_sig = 0, None
+                    continue
+                held_polls = 0
+                sig = (len(self._sleepers), self._sleepers[0])
+                stable = stable + 1 if sig == last_sig else 1
+                last_sig = sig
+                if stable >= self._stability_polls:
+                    self._now = max(self._now, self._sleepers[0])
+                    self.advances += 1
+                    stable, last_sig = 0, None
+                    self._drop_passed()
+                    self._cond.notify_all()
+
+    def close(self) -> None:
+        """Stop the advancer and release every parked sleeper immediately."""
+        self._stop.set()
+        with self._cond:
+            self._closed = True
+            if self._sleepers:
+                self._now = max(self._now, max(self._sleepers))
+                self._sleepers.clear()
+            self._cond.notify_all()
+        if self._advancer is not None:
+            self._advancer.join(timeout=2.0)
+
+
+# ---------------------------------------------------------------------------
+# Active-clock registry
+# ---------------------------------------------------------------------------
+
+_active: Clock = WallClock()
+_registry_lock = threading.Lock()
+
+
+def get_clock() -> Clock:
+    return _active
+
+
+def set_clock(clock: Clock) -> Clock:
+    """Install ``clock`` as the process-wide active clock; returns the old one."""
+    global _active
+    with _registry_lock:
+        previous = _active
+        _active = clock
+        return previous
+
+
+def now() -> float:
+    return _active.now()
+
+
+def guard_wait(event: threading.Event, timeout: Optional[float] = None) -> bool:
+    """Completion-event wait with a *guard* timeout (Submission.wait,
+    WorkflowManager.run): returns when the event fires, or when the timeout
+    elapses on EITHER the active clock or real time, whichever comes first.
+
+    Unlike ``Clock.wait_event`` this never registers the deadline as a
+    virtual sleeper: a guard must not invite the auto-advancer to jump to
+    the timeout while real (non-sleeping) work is still executing.  The
+    real-time bound is what keeps a frozen virtual clock from turning a
+    guard into an infinite hang."""
+    clock = get_clock()
+    if timeout is None or isinstance(clock, WallClock):
+        return clock.wait_event(event, timeout)
+    v_deadline = clock.now() + timeout
+    r_deadline = time.monotonic() + timeout
+    while True:
+        if event.is_set():
+            return True
+        if clock.now() >= v_deadline or time.monotonic() >= r_deadline:
+            return event.is_set()
+        event.wait(0.02)
+
+
+@contextmanager
+def use_clock(clock: Clock):
+    """Scoped clock swap (tests): restores the previous clock on exit."""
+    previous = set_clock(clock)
+    try:
+        yield clock
+    finally:
+        set_clock(previous)
+
+
+@contextmanager
+def virtual_time(start: float = 0.0, auto_advance: bool = True, **kw):
+    """Scoped VirtualClock that is closed (all sleepers released) on exit."""
+    clock = VirtualClock(start=start, auto_advance=auto_advance, **kw)
+    try:
+        with use_clock(clock):
+            yield clock
+    finally:
+        clock.close()

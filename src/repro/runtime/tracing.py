@@ -9,19 +9,21 @@ Definitions (Hydra paper §5):
         prepare/shut down the task execution environments.
   TTX - total time the platform takes to execute all submitted tasks.
 
-Every Task/Pod/Provider carries a trace: a list of (event, t) with
-``time.perf_counter()`` timestamps.  Metrics are derived purely from traces,
-so they are platform- and workload-agnostic, exactly as in the paper.
+Every Task/Pod/Provider carries a trace: a list of (event, t) stamped by the
+*active clock* (runtime/clock.py) — ``time.perf_counter`` under the default
+WallClock, exact virtual instants under a VirtualClock.  Metrics are derived
+purely from traces, so they are platform- and workload-agnostic, exactly as
+in the paper, and scheduler tests can replay 10k-task scenarios in virtual
+time without distorting a single metric formula.
 """
 from __future__ import annotations
 
 import threading
-import time
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Iterable, Optional
 
-now = time.perf_counter
+from repro.runtime.clock import now
 
 
 @dataclass

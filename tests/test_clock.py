@@ -1,0 +1,121 @@
+"""Clock layer: wall/virtual semantics, registry scoping, trace integration."""
+import threading
+import time
+
+from repro.runtime import tracing
+from repro.runtime.clock import (
+    VirtualClock,
+    WallClock,
+    get_clock,
+    use_clock,
+    virtual_time,
+)
+
+
+def test_wall_clock_tracks_real_time():
+    c = WallClock()
+    t0 = c.now()
+    c.sleep(0.01)
+    assert c.now() - t0 >= 0.009
+
+
+def test_default_clock_is_wall():
+    assert get_clock().name == "wall"
+
+
+def test_virtual_manual_advance():
+    c = VirtualClock(start=100.0, auto_advance=False)
+    assert c.now() == 100.0
+    c.advance(5.0)
+    assert c.now() == 105.0
+    c.advance_to(50.0)  # never goes backwards
+    assert c.now() == 105.0
+    c.close()
+
+
+def test_virtual_sleep_wakes_at_exact_deadline():
+    with virtual_time() as c:
+        woke = []
+
+        def sleeper():
+            c.sleep(10.0)
+            woke.append(c.now())
+
+        th = threading.Thread(target=sleeper)
+        th.start()
+        th.join(timeout=5.0)
+        assert not th.is_alive()
+        assert woke == [10.0]  # exact virtual deadline, not a noisy wall time
+
+
+def test_virtual_sleep_many_same_deadline_one_tick():
+    # manual advance: deterministic regardless of thread start-up latency
+    c = VirtualClock(auto_advance=False)
+    n = 16
+    done = threading.Barrier(n + 1, timeout=10.0)
+
+    def sleeper():
+        c.sleep(3.0)
+        done.wait()
+
+    for _ in range(n):
+        threading.Thread(target=sleeper, daemon=True).start()
+    deadline = time.time() + 10.0
+    while c.pending_deadlines() < n and time.time() < deadline:
+        time.sleep(0.001)
+    assert c.pending_deadlines() == n
+    c.advance(3.0)  # one tick wakes the whole cohort
+    done.wait()
+    assert c.now() == 3.0
+    c.close()
+
+
+def test_virtual_wait_event_timeout_and_signal():
+    with virtual_time() as c:
+        ev = threading.Event()
+        assert c.wait_event(ev, timeout=5.0) is False  # virtual timeout elapses
+        assert c.now() >= 5.0
+        ev.set()
+        assert c.wait_event(ev, timeout=5.0) is True
+
+
+def test_close_releases_parked_sleepers():
+    c = VirtualClock(auto_advance=False)
+    released = threading.Event()
+
+    def sleeper():
+        c.sleep(1e9)
+        released.set()
+
+    th = threading.Thread(target=sleeper, daemon=True)
+    th.start()
+    time.sleep(0.02)
+    c.close()
+    assert released.wait(timeout=5.0)
+
+
+def test_use_clock_scopes_and_restores():
+    before = get_clock()
+    c = VirtualClock(auto_advance=False)
+    with use_clock(c):
+        assert get_clock() is c
+    assert get_clock() is before
+    c.close()
+
+
+def test_tracing_now_follows_active_clock():
+    with virtual_time(start=42.0) as _:
+        tr = tracing.Trace()
+        tr.add("evt")
+        assert tr.events[0][1] == 42.0
+    assert tracing.now() > 0  # back on wall time
+
+
+def test_trace_timestamps_monotonic_under_virtual_time():
+    with virtual_time() as c:
+        tr = tracing.Trace()
+        for i in range(5):
+            tr.add(f"e{i}")
+            c.advance(1.0)
+        ts = [t for _, t in tr.events]
+        assert ts == sorted(ts) and ts == [0.0, 1.0, 2.0, 3.0, 4.0]

@@ -1,0 +1,352 @@
+"""Streaming dispatcher: micro-batching, late binding, backfill, cycle
+detection, and the 10k-task virtual-clock scheduling scenario."""
+import threading
+
+import pytest
+
+from repro.core import (
+    Hydra,
+    NoEligibleProvider,
+    ProviderSpec,
+    Resources,
+    Task,
+    Workflow,
+    WorkflowManager,
+)
+from repro.runtime.clock import virtual_time
+
+
+def chain_workflows(n_instances: int, stages: int = 4, kind: str = "noop", duration: float = 0.0):
+    wfs = []
+    for i in range(n_instances):
+        wf = Workflow(name=f"chain.{i:05d}")
+        prev = None
+        for _ in range(stages):
+            t = Task(kind=kind, duration=duration)
+            prev = wf.add(t, deps=[prev] if prev else None)
+        wfs.append(wf)
+    return wfs
+
+
+@pytest.fixture
+def broker(tmp_path):
+    h = Hydra(
+        pod_store="memory",
+        workdir=str(tmp_path),
+        streaming=True,
+        batch_window=0.001,
+        max_batch=256,
+    )
+    yield h
+    h.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# Micro-batching + correctness
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_completes_dags_with_fewer_submissions(broker):
+    broker.register_provider(ProviderSpec(name="s1", concurrency=8))
+    broker.register_provider(ProviderSpec(name="s2", concurrency=8))
+    wfm = WorkflowManager(broker)
+    assert wfm.streaming  # mode follows the broker
+    wfs = chain_workflows(30)
+    wfm.run(wfs, timeout=60)
+    assert all(w.done and not w.failed for w in wfs)
+    stats = broker.stream_stats()
+    n_tasks = sum(len(w.tasks) for w in wfs)
+    # readiness events coalesced: far fewer pipeline rounds than tasks
+    assert stats["n_submits"] < n_tasks / 4
+    assert stats["mean_batch_size"] > 1.0
+    assert stats["n_pods"] < n_tasks / 2
+
+
+def test_micro_batched_pods_carry_batch_id(broker):
+    broker.register_provider(ProviderSpec(name="b1", concurrency=8))
+    wfm = WorkflowManager(broker)
+    wfs = chain_workflows(10)
+    wfm.run(wfs, timeout=60)
+    broker.dispatcher().drain(timeout=10)
+    pods = [p for sub in broker._submissions for p in sub.pods]
+    assert pods and all(p.batch_id is not None for p in pods)
+
+
+def test_dispatcher_lazy_start_does_not_flip_mode(tmp_path):
+    h = Hydra(pod_store="memory", workdir=str(tmp_path))
+    assert not h.streaming
+    h.register_provider(ProviderSpec(name="z1", concurrency=4))
+    tasks = [Task(kind="noop") for _ in range(8)]
+    h.dispatch(tasks)  # lazy-starts the loop for THIS caller only
+    # mode is a constructor choice: other WorkflowManagers sharing the
+    # broker must not silently switch dispatch paths mid-run
+    assert not h.streaming
+    assert h.dispatcher().drain(timeout=10)
+    for t in tasks:
+        t.result(timeout=10)
+    h.shutdown(wait=True)
+
+
+def test_streaming_rejects_conflicting_pod_shaping(tmp_path):
+    h = Hydra(pod_store="memory", workdir=str(tmp_path), streaming=True)
+    h.register_provider(ProviderSpec(name="cs", concurrency=4))
+    wf = Workflow()
+    wf.add(Task(kind="noop"))
+    with pytest.raises(ValueError, match="pod shaping"):
+        WorkflowManager(h, partitioning="scpp").run([wf], wait=False)
+    # agreeing (or unset) shaping is fine
+    WorkflowManager(h, partitioning=h.partitioning).run([wf], timeout=30)
+    assert wf.done
+    h.shutdown(wait=True)
+
+
+def test_retry_releases_load_aware_accounting(tmp_path):
+    """Regression: a bound batch whose dispatch round fails must release the
+    policy's outstanding counts before being re-bound, or load-aware binding
+    would drift by one per task per retry forever."""
+    h = Hydra(pod_store="memory", workdir=str(tmp_path), policy="load_aware")
+    h.register_provider(ProviderSpec(name="la", concurrency=4))
+    d = h.dispatcher()
+    tasks = [Task(kind="noop") for _ in range(6)]
+    # simulate a post-bind pipeline failure, then recovery
+    boom = {"n": 2}
+    orig = h.store.serialize
+
+    def flaky(pod):
+        if boom["n"] > 0:
+            boom["n"] -= 1
+            raise OSError("serialize blip")
+        orig(pod)
+
+    h.store.serialize = flaky
+    d.enqueue(tasks)
+    for t in tasks:
+        assert t.result(timeout=10) is None
+    assert d.drain(timeout=10)
+    assert h.policy.outstanding["la"] == 0  # fully released, no drift
+    h.shutdown(wait=True)
+
+
+def test_unplaceable_task_fails_alone_batch_survives(broker):
+    broker.register_provider(ProviderSpec(name="small", concurrency=4))
+    ok_tasks = [Task(kind="noop") for _ in range(8)]
+    monster = Task(kind="noop", resources=Resources(cpus=10_000))
+    broker.dispatch(ok_tasks + [monster])
+    for t in ok_tasks:
+        assert t.result(timeout=10) is None
+    with pytest.raises(NoEligibleProvider):
+        monster.result(timeout=10)
+
+
+def test_late_binding_skips_tripped_member(broker):
+    """Breaker state is consulted at dispatch time, not DAG-build time."""
+    group = broker.register_group(
+        "pool", [ProviderSpec(name=n, concurrency=4) for n in ("lb1", "lb2")]
+    )
+    group.mark_down("lb1")  # open lb1's breaker BEFORE any dispatch
+    tasks = [Task(kind="noop") for _ in range(16)]
+    broker.dispatch(tasks)
+    for t in tasks:
+        t.result(timeout=10)
+    assert all(t.provider == "lb2" for t in tasks)
+
+
+def test_backfill_orders_shallow_tasks_first(broker):
+    """Deeper-workflow tasks ride along behind frontier work in one batch."""
+    broker.register_provider(ProviderSpec(name="bf", concurrency=4))
+    d = broker.dispatcher()
+    deep = [Task(kind="noop") for _ in range(4)]
+    shallow = [Task(kind="noop") for _ in range(4)]
+    for t in deep:
+        t.depth = 3
+    batch_order = []
+    orig = broker.submit
+
+    def spy(tasks, **kw):
+        batch_order.append([t.depth for t in tasks])
+        return orig(tasks, **kw)
+
+    broker.submit = spy
+    d.enqueue(deep + shallow)
+    assert d.drain(timeout=10)
+    merged = [depth for batch in batch_order for depth in batch]
+    assert merged == sorted(merged)  # shallow first, deep backfills
+
+
+def test_persistent_outage_surfaces_with_final_states(tmp_path):
+    """Regression: tasks failed by the persistent-outage path must reach a
+    FINAL tstate (not just a resolved future), or workflow completion
+    (all(t.final)) would hang forever."""
+    h = Hydra(pod_store="memory", workdir=str(tmp_path))
+    d = h.dispatcher()
+    d.max_consecutive_failures = 3  # surface fast: no providers registered
+    tasks = [Task(kind="noop") for _ in range(4)]
+    h.dispatch(tasks)
+    for t in tasks:
+        with pytest.raises(RuntimeError):
+            t.result(timeout=10)
+        assert t.final
+    h.shutdown(wait=True)
+
+
+def test_submission_wait_times_out_under_virtual_clock(tmp_path):
+    """Regression: a guard timeout on a frozen virtual clock must return
+    False in bounded real time instead of hanging forever."""
+    import time as _time
+
+    with virtual_time():
+        h = Hydra(pod_store="memory", workdir=str(tmp_path))
+        from repro.core import Submission
+
+        sub = Submission([Task(kind="noop")], h)  # never dispatched
+        t0 = _time.monotonic()
+        assert sub.wait(timeout=0.5) is False
+        assert _time.monotonic() - t0 < 30.0
+        h.shutdown(wait=True)
+
+
+def test_stream_stats_shape(broker):
+    broker.register_provider(ProviderSpec(name="st", concurrency=4))
+    broker.dispatch([Task(kind="noop") for _ in range(4)])
+    broker.dispatcher().drain(timeout=10)
+    stats = broker.stream_stats()
+    for key in ("batches", "tasks_dispatched", "n_submits", "n_pods", "mean_batch_size"):
+        assert key in stats
+
+
+# ---------------------------------------------------------------------------
+# Cycle detection (a cyclic DAG used to deadlock the run loop forever)
+# ---------------------------------------------------------------------------
+
+
+def test_self_dependency_rejected():
+    wf = Workflow(name="selfdep")
+    t = Task(kind="noop")
+    with pytest.raises(ValueError, match="cycle"):
+        wf.add(t, deps=[t])
+
+
+def test_two_cycle_via_forward_dep_rejected():
+    wf = Workflow(name="two")
+    t1, t2 = Task(kind="noop"), Task(kind="noop")
+    wf.add(t1, deps=[t2])  # forward dep: t2 not added yet
+    with pytest.raises(ValueError, match=f"{t1.uid}"):
+        wf.add(t2, deps=[t1])
+
+
+def test_three_cycle_rejected_with_offending_path():
+    wf = Workflow(name="three")
+    a, b, c = (Task(kind="noop") for _ in range(3))
+    wf.add(a, deps=[c])
+    wf.add(b, deps=[a])
+    with pytest.raises(ValueError, match="cycle"):
+        wf.add(c, deps=[b])
+
+
+def test_duplicate_add_rejected():
+    wf = Workflow(name="dup")
+    t = Task(kind="noop")
+    wf.add(t)
+    with pytest.raises(ValueError, match="already added"):
+        wf.add(t)
+
+
+def test_run_revalidates_hand_built_cycle(tmp_path):
+    """Regression: a cycle smuggled past add() (direct graph surgery) must
+    raise at run() instead of deadlocking the run loop forever."""
+    wf = Workflow(name="smuggled")
+    a, b = Task(kind="noop"), Task(kind="noop")
+    wf.add(a)
+    wf.add(b, deps=[a])
+    # surgically close the loop a -> b -> a
+    wf.deps[a.uid].add(b.uid)
+    wf.children.setdefault(b.uid, []).append(a.uid)
+    h = Hydra(pod_store="memory", workdir=str(tmp_path))
+    h.register_provider(ProviderSpec(name="cy", concurrency=2))
+    with pytest.raises(ValueError, match="cycle"):
+        WorkflowManager(h).run([wf], wait=False)
+    h.shutdown(wait=True)
+
+
+def test_dangling_dep_rejected_at_run(tmp_path):
+    """Regression: a forward dep that is never add()ed can never complete,
+    which used to deadlock the run loop just like a cycle."""
+    wf = Workflow(name="dangling")
+    ghost = Task(kind="noop")
+    wf.add(Task(kind="noop"), deps=[ghost])  # ghost never added
+    h = Hydra(pod_store="memory", workdir=str(tmp_path))
+    h.register_provider(ProviderSpec(name="dg", concurrency=2))
+    with pytest.raises(ValueError, match="never added"):
+        WorkflowManager(h).run([wf], wait=False)
+    h.shutdown(wait=True)
+
+
+def test_workflow_with_unplaceable_task_reports_failed(broker):
+    """A dispatcher-surfaced error (CANCELED + exception on the future) must
+    make the workflow read as failed, not as a clean success."""
+    broker.register_provider(ProviderSpec(name="wf1", concurrency=4))
+    wf = Workflow(name="unplaceable")
+    a = wf.add(Task(kind="noop"))
+    bad = wf.add(Task(kind="noop", resources=Resources(cpus=10_000)), deps=[a])
+    wf.add(Task(kind="noop"), deps=[bad])
+    WorkflowManager(broker).run([wf], timeout=30)
+    assert wf.done
+    assert wf.failed  # the errored task is CANCELED with NoEligibleProvider
+
+
+def test_diamond_dag_is_not_a_cycle(broker):
+    broker.register_provider(ProviderSpec(name="di", concurrency=4))
+    wf = Workflow(name="diamond")
+    a = wf.add(Task(kind="noop"))
+    b = wf.add(Task(kind="noop"), deps=[a])
+    c = wf.add(Task(kind="noop"), deps=[a])
+    d = wf.add(Task(kind="noop"), deps=[b, c])
+    assert wf.find_cycle() is None
+    assert wf.depths()[d.uid] == 2
+    WorkflowManager(broker).run([wf], timeout=30)
+    assert wf.done and not wf.failed
+
+
+# ---------------------------------------------------------------------------
+# The 10k-task virtual-clock scheduling scenario (ISSUE acceptance: the
+# virtual-clock scheduler suite completes in well under 60 s wall-clock)
+# ---------------------------------------------------------------------------
+
+
+def test_10k_task_dag_schedule_under_virtual_clock(tmp_path):
+    with virtual_time() as clock:
+        h = Hydra(
+            pod_store="memory",
+            workdir=str(tmp_path),
+            streaming=True,
+            batch_window=0.0,  # virtual window; 0 keeps the pump eager
+            max_batch=1024,
+        )
+        h.register_provider(ProviderSpec(name="v1", concurrency=64))
+        h.register_provider(ProviderSpec(name="v2", concurrency=64))
+        wfm = WorkflowManager(h)
+        wfs = chain_workflows(2500, stages=4)  # 10_000 tasks
+        wfm.run(wfs, timeout=300)
+        assert all(w.done and not w.failed for w in wfs)
+        stats = h.stream_stats()
+        assert stats["n_submits"] < 2500  # coalescing held up at scale
+        # every trace event carries a virtual timestamp from this run
+        t = wfs[0].tasks[0]
+        assert all(ts >= 0.0 for _, ts in t.trace.events)
+        h.shutdown(wait=True)
+
+
+def test_virtual_sleep_dag_runs_in_milliseconds(tmp_path):
+    """120 virtual seconds of sleep tasks resolve in real milliseconds."""
+    with virtual_time() as clock:
+        h = Hydra(
+            pod_store="memory", workdir=str(tmp_path), streaming=True,
+            batch_window=0.0, tasks_per_pod=8,
+        )
+        h.register_provider(ProviderSpec(name="vs", concurrency=32))
+        wfm = WorkflowManager(h)
+        wfs = chain_workflows(10, stages=3, kind="sleep", duration=4.0)
+        wfm.run(wfs, timeout=600)
+        assert all(w.done and not w.failed for w in wfs)
+        assert clock.now() >= 12.0  # >= critical path in virtual seconds
+        h.shutdown(wait=True)

@@ -1,0 +1,127 @@
+"""Chaos: random ProviderDown injections against a 2-member group while 50
+DAG instances stream through the dispatcher.  Zero tasks may end FAILED and
+every workflow must complete (extends tests/test_groups.py failover patterns
+to the streaming dispatcher)."""
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    BreakerState,
+    Hydra,
+    ProviderSpec,
+    Task,
+    TaskState,
+    Workflow,
+    WorkflowManager,
+)
+
+pytestmark = pytest.mark.slow  # deselectable on PR CI runs (-m "not slow")
+
+
+def chain_workflows(n_instances: int, stages: int, duration: float) -> list[Workflow]:
+    wfs = []
+    for i in range(n_instances):
+        wf = Workflow(name=f"chaos.{i:05d}")
+        prev = None
+        for _ in range(stages):
+            t = Task(kind="sleep", duration=duration, max_retries=4)
+            prev = wf.add(t, deps=[prev] if prev else None)
+        wfs.append(wf)
+    return wfs
+
+
+def test_chaos_streaming_failover_zero_failed_tasks(tmp_path):
+    rng = random.Random(0xC0FFEE)
+    h = Hydra(
+        pod_store="memory",
+        workdir=str(tmp_path),
+        streaming=True,
+        batch_window=0.002,
+        max_batch=64,
+    )
+    group = h.register_group(
+        "pool",
+        [ProviderSpec(name=n, concurrency=8) for n in ("cm1", "cm2")],
+        reset_timeout_s=0.05,
+    )
+    wfm = WorkflowManager(h)
+    wfs = chain_workflows(50, stages=4, duration=0.004)
+    done = threading.Event()
+
+    def runner():
+        wfm.run(wfs, timeout=180)
+        done.set()
+
+    th = threading.Thread(target=runner, daemon=True)
+    th.start()
+
+    # inject outages mid-stream: one member at a time, always letting the
+    # breaker close again before the next strike (a 2-member pool with both
+    # members down has, by design, nowhere to fail over to)
+    injections = 0
+    while not done.is_set() and injections < 5:
+        time.sleep(rng.uniform(0.05, 0.15))
+        if done.is_set():
+            break
+        victim = rng.choice(group.member_names)
+        h.manager(victim).fail()
+        injections += 1
+        time.sleep(rng.uniform(0.02, 0.06))  # stay down mid-stream
+        h.manager(victim).recover()
+        deadline = time.time() + 10.0
+        while (
+            not done.is_set()
+            and group.breaker_state(victim) != BreakerState.CLOSED
+            and time.time() < deadline
+        ):
+            time.sleep(0.01)
+
+    assert done.wait(timeout=180), "workflows did not finish under chaos"
+    th.join(timeout=10)
+    assert injections >= 1  # chaos actually happened
+
+    all_tasks = [t for wf in wfs for t in wf.tasks]
+    states = {}
+    for t in all_tasks:
+        states[t.tstate.value] = states.get(t.tstate.value, 0) + 1
+    assert states == {"DONE": 200}, f"non-DONE tasks under chaos: {states}"
+    assert all(wf.done and not wf.failed for wf in wfs)
+    assert not any(t.tstate == TaskState.FAILED for t in all_tasks)
+    # failover left its audit trail: some task was re-routed or a breaker
+    # tripped on at least one member
+    trips = sum(r["trips"] for r in h.group_rows())
+    assert trips >= 1
+    h.shutdown(wait=True)
+
+
+def test_chaos_elastic_member_removal_mid_stream(tmp_path):
+    """Permanent member loss (remove_provider) during streaming dispatch:
+    survivors absorb everything, still zero failed tasks."""
+    h = Hydra(
+        pod_store="memory",
+        workdir=str(tmp_path),
+        streaming=True,
+        batch_window=0.002,
+    )
+    group = h.register_group(
+        "pool", [ProviderSpec(name=n, concurrency=8) for n in ("em1", "em2", "em3")]
+    )
+    wfm = WorkflowManager(h)
+    wfs = chain_workflows(20, stages=4, duration=0.004)
+    done = threading.Event()
+
+    def runner():
+        wfm.run(wfs, timeout=120)
+        done.set()
+
+    threading.Thread(target=runner, daemon=True).start()
+    time.sleep(0.05)
+    h.remove_provider("em2")
+    assert done.wait(timeout=120)
+    assert all(wf.done and not wf.failed for wf in wfs)
+    assert "em2" not in group
+    assert all(t.tstate == TaskState.DONE for wf in wfs for t in wf.tasks)
+    h.shutdown(wait=True)

@@ -57,13 +57,20 @@ def test_compile_cache_shared_across_providers(hydra):
 
 
 def test_metrics_scale_with_task_count(hydra):
-    ovhs = []
-    for n in (100, 400):
-        tasks = [Task(kind="noop") for _ in range(n)]
-        sub = hydra.submit(tasks)
-        sub.wait(timeout=120)
-        ovhs.append(sub.metrics().ovh)
-    assert ovhs[1] > ovhs[0]  # OVH dominated by #tasks (paper claim)
+    # interleaved pairs + majority vote: wall-clock noise on this shared
+    # single core arrives in decaying bursts (GC, scheduler, leftover
+    # teardown from earlier modules), so back-to-back 100/400 pairs see the
+    # same environment and a single distorted pair cannot flip the verdict
+    wins = 0
+    for _ in range(3):
+        ovh = {}
+        for n in (100, 400):
+            tasks = [Task(kind="noop") for _ in range(n)]
+            sub = hydra.submit(tasks)
+            sub.wait(timeout=120)
+            ovh[n] = sub.metrics().ovh
+        wins += ovh[400] > ovh[100]
+    assert wins >= 2  # OVH dominated by #tasks (paper claim)
 
 
 def test_provider_failure_plus_workflows(hydra):

@@ -85,3 +85,75 @@ def test_resources_fits():
     small = Resources(cpus=1, accels=0, memory_mb=100)
     big = Resources(cpus=8, accels=2, memory_mb=1024)
     assert small.fits(big) and not big.fits(small)
+
+
+# ---------------------------------------------------------------------------
+# Property suite: random legal/illegal op sequences (transitions + completion
+# calls) must never corrupt the machine — final states stay final (modulo the
+# explicit FAILED -> BOUND retry), done callbacks fire exactly once, and every
+# trace is monotonically timestamped.
+# ---------------------------------------------------------------------------
+
+# ops: attempted transitions (legal or not) interleaved with completion calls
+OPS = ALL_STATES + ["mark_done", "mark_failed", "mark_canceled", "reset_for_retry"]
+
+
+def _apply(task, op):
+    if isinstance(op, TaskState):
+        task.try_advance(op)
+    elif op == "mark_done":
+        task.mark_done("r")
+    elif op == "mark_failed":
+        task.mark_failed(RuntimeError("boom"))
+    elif op == "mark_canceled":
+        task.mark_canceled()
+    elif op == "reset_for_retry":
+        if task.tstate == TaskState.FAILED and task.retries < task.max_retries:
+            task.reset_for_retry()
+
+
+@given(st.lists(st.sampled_from(OPS), min_size=1, max_size=16))
+@settings(max_examples=300, deadline=None)
+def test_random_ops_never_corrupt_final_states(ops):
+    t = Task(kind="noop", max_retries=1)
+    for op in ops:
+        before = t.tstate
+        _apply(t, op)
+        after = t.tstate
+        assert after in set(TaskState)
+        if before in FINAL_STATES and before != TaskState.FAILED:
+            # DONE/CANCELED are absorbing, whatever is thrown at them
+            assert after == before
+        if before == TaskState.FAILED:
+            # FAILED may only leave via the explicit retry path
+            assert after in (TaskState.FAILED, TaskState.BOUND)
+
+
+@given(st.lists(st.sampled_from(OPS), min_size=1, max_size=16))
+@settings(max_examples=300, deadline=None)
+def test_done_callbacks_never_double_fire(ops):
+    t = Task(kind="noop", max_retries=0)
+    fired = []
+    t.add_done_callback(lambda fut: fired.append(fut))
+    for op in ops:
+        _apply(t, op)
+    assert len(fired) <= 1
+    if t.done():  # resolved future <=> exactly one callback fire
+        assert len(fired) == 1
+    # duplicate completion attempts are no-ops: a resolved (or resolvable)
+    # future fires exactly once; a tstate-only CANCELED (future never
+    # resolved) stays silent rather than firing late
+    t.mark_done("again")
+    t.mark_done("again")
+    assert len(fired) == (1 if t.done() else 0)
+
+
+@given(st.lists(st.sampled_from(OPS), min_size=1, max_size=16))
+@settings(max_examples=300, deadline=None)
+def test_trace_events_monotonically_timestamped(ops):
+    t = Task(kind="noop", max_retries=1)
+    for op in ops:
+        _apply(t, op)
+    ts = [stamp for _, stamp in t.trace.events]
+    assert ts == sorted(ts)
+    assert t.trace.events[0][0] == "created"
