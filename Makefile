@@ -4,13 +4,20 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-full bench-groups bench-streaming
+.PHONY: test test-fast lint cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic
 
 test:  ## tier-1 verify (ROADMAP.md)
 	$(PY) -m pytest -x -q
 
 test-fast:  ## skip the slow end-to-end marks
 	$(PY) -m pytest -x -q -m "not slow"
+
+lint:  ## what the CI lint job runs (needs ruff: pip install ruff)
+	ruff check src tests benchmarks
+	ruff format --check src
+
+cov:  ## tier-1 with the CI coverage floor (needs pytest-cov)
+	$(PY) -m pytest -x -q --cov=repro.core --cov-report=term --cov-fail-under=80
 
 bench:  ## scaled-down benchmark suite -> artifacts/bench/*.csv
 	$(PY) -m benchmarks.run
@@ -21,5 +28,11 @@ bench-full:  ## paper-scale task counts
 bench-groups:  ## exp5 only: provider-group throughput + failover overhead
 	$(PY) -m benchmarks.exp5_groups
 
+bench-smoke:  ## CI-sized subset -> artifacts/bench/BENCH_smoke.json
+	$(PY) -m benchmarks.run --smoke
+
 bench-streaming:  ## exp6 only: streaming vs frontier DAG dispatch (800 instances)
 	$(PY) -m benchmarks.exp6_streaming --full
+
+bench-elastic:  ## exp7 only: elastic weak scaling + over-provisioning cost curve
+	$(PY) -m benchmarks.exp7_elastic --full

@@ -10,11 +10,7 @@ identical metric definitions).
 from __future__ import annotations
 
 import csv
-import io
 import os
-import sys
-import time
-from typing import Optional
 
 from repro.core import Hydra, ProviderSpec
 

@@ -1,0 +1,195 @@
+"""Experiment 7: elastic acquisition — weak scaling + the cost of elasticity.
+
+The paper's central claim is concurrent acquisition of cloud and HPC
+resources sized to the workload (§1, §4-5).  With the autoscaler
+(core/autoscaler.py) the broker can now *grow into* demand, so two protocol
+pieces become measurable:
+
+  weak scaling   - fixed work per demanded node (W tasks x d seconds each),
+                   demanded node count swept 1 -> 16.  An ideal elastic
+                   broker keeps makespan ~constant: each extra unit of work
+                   brings its own provider.  Reported: makespan, acquired
+                   provider count (must reach the demanded level under
+                   sustained pressure), weak-scaling efficiency
+                   T(1)/T(n), and node-seconds actually held.
+
+  cost curve     - FIXED total work, elastic (min 1, max 16, paying modeled
+                   cloud-startup queue wait) vs statically over-provisioned
+                   pools of k = 1..16 providers held for the whole run.
+                   Static pools trade node-seconds (cost) for makespan
+                   (no queue wait); the elastic run should land near the
+                   big-static makespan at a fraction of its node-seconds.
+
+Everything runs under a VirtualClock with a seeded latency RNG: modeled
+cloud startup latencies (~30 virtual seconds) cost real milliseconds and
+the whole experiment is deterministic.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import Hydra, LaunchSpec, ProviderPool, Task, cloud_startup
+from repro.core.provider import ProviderSpec
+from repro.runtime.clock import virtual_time
+
+from benchmarks.common import print_rows, write_csv
+
+
+def _cloud_template(name: str, concurrency: int = 4) -> ProviderSpec:
+    return ProviderSpec(name=name, platform="cloud", connector="caas", concurrency=concurrency)
+
+
+def _run_tasks(h: Hydra, tasks: list[Task], real_timeout_s: float = 120.0) -> tuple[float, float]:
+    """Dispatch and wait; returns (virtual makespan, absolute end timestamp).
+    Makespan runs first-dispatch -> last exec_done, excluding post-drain
+    idle ticks; the absolute end is what node-seconds accounting needs
+    (Autoscaler.node_seconds takes a clock timestamp, not a duration)."""
+    from repro.runtime.clock import get_clock
+
+    t0 = get_clock().now()
+    h.dispatch(tasks)
+    deadline = time.monotonic() + real_timeout_s
+    while not all(t.done() for t in tasks) and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert all(t.done() for t in tasks), "exp7: tasks did not drain"
+    assert all(t.exception() is None for t in tasks), "exp7: failed tasks"
+    ends = [t.trace.last("exec_done") for t in tasks]
+    end = max(e for e in ends if e is not None)
+    return end - t0, end
+
+
+def weak_scaling(
+    node_counts=(1, 2, 4, 8, 16),
+    tasks_per_node: int = 16,
+    task_s: float = 8.0,
+    acq_mean_s: float = 30.0,
+) -> list[dict]:
+    rows = []
+    t1 = None
+    for n in node_counts:
+        with virtual_time():
+            h = Hydra(streaming=True, pod_store="memory", batch_window=0.002)
+            pool = ProviderPool(
+                [
+                    LaunchSpec(
+                        template=_cloud_template("elastic"),
+                        min_instances=1,
+                        max_instances=n,
+                        latency=cloud_startup(mean_s=acq_mean_s, sigma=0.2),
+                    )
+                ],
+                seed=1234,
+            )
+            scaler = h.autoscale(
+                pool,
+                tick_s=1.0,
+                warmup_ticks=2,
+                cooldown_ticks=4,
+                scale_out_pressure=1.2,
+                max_concurrent_acquisitions=n,
+            )
+            tasks = [Task(kind="sleep", duration=task_s) for _ in range(n * tasks_per_node)]
+            makespan, end_ts = _run_tasks(h, tasks)
+            node_s = scaler.node_seconds(until=end_ts)
+            row = {
+                "mode": "weak",
+                "n_demanded": n,
+                "n_acquired": scaler.arrivals,
+                "n_tasks": len(tasks),
+                "makespan_s": round(makespan, 2),
+                "node_seconds": round(node_s, 1),
+                "scaled_to_demand": scaler.arrivals >= n,
+            }
+            h.shutdown(wait=True)
+        t1 = t1 if t1 is not None else makespan
+        row["weak_efficiency"] = round(t1 / makespan, 3)
+        rows.append(row)
+    return rows
+
+
+def cost_curve(
+    n_tasks: int = 128,
+    task_s: float = 8.0,
+    static_counts=(1, 2, 4, 8, 16),
+    acq_mean_s: float = 30.0,
+) -> list[dict]:
+    rows = []
+    # statically over-provisioned baselines: k providers held end to end
+    for k in static_counts:
+        with virtual_time():
+            h = Hydra(streaming=True, pod_store="memory", batch_window=0.002)
+            for i in range(k):
+                h.register_provider(_cloud_template(f"static{i}"))
+            tasks = [Task(kind="sleep", duration=task_s) for _ in range(n_tasks)]
+            makespan, _ = _run_tasks(h, tasks)
+            rows.append(
+                {
+                    "mode": f"static_{k}",
+                    "n_providers": k,
+                    "n_tasks": n_tasks,
+                    "makespan_s": round(makespan, 2),
+                    "node_seconds": round(k * makespan, 1),
+                }
+            )
+            h.shutdown(wait=True)
+    # elastic: starts at 1, grows under pressure, pays the queue wait
+    with virtual_time():
+        h = Hydra(streaming=True, pod_store="memory", batch_window=0.002)
+        pool = ProviderPool(
+            [
+                LaunchSpec(
+                    template=_cloud_template("elastic"),
+                    min_instances=1,
+                    max_instances=max(static_counts),
+                    latency=cloud_startup(mean_s=acq_mean_s, sigma=0.2),
+                )
+            ],
+            seed=1234,
+        )
+        scaler = h.autoscale(
+            pool,
+            tick_s=1.0,
+            warmup_ticks=2,
+            cooldown_ticks=4,
+            scale_out_pressure=1.2,
+            max_concurrent_acquisitions=max(static_counts),
+        )
+        tasks = [Task(kind="sleep", duration=task_s) for _ in range(n_tasks)]
+        makespan, end_ts = _run_tasks(h, tasks)
+        rows.append(
+            {
+                "mode": "elastic",
+                "n_providers": scaler.arrivals,
+                "n_tasks": n_tasks,
+                "makespan_s": round(makespan, 2),
+                "node_seconds": round(scaler.node_seconds(until=end_ts), 1),
+            }
+        )
+        h.shutdown(wait=True)
+    biggest = rows[len(static_counts) - 1]
+    for row in rows:
+        row["cost_vs_max_static"] = round(row["node_seconds"] / max(biggest["node_seconds"], 1e-9), 3)
+    return rows
+
+
+def run(weak_nodes=(1, 2, 4, 8, 16), n_tasks=128, verbose=True) -> list[dict]:
+    rows = weak_scaling(node_counts=weak_nodes)
+    rows += cost_curve(n_tasks=n_tasks, static_counts=weak_nodes)
+    write_csv("exp7_elastic", rows)
+    if verbose:
+        print_rows(rows)
+    return rows
+
+
+def main(full: bool = False, smoke: bool = False):
+    if smoke:
+        return run(weak_nodes=(1, 4), n_tasks=24)
+    if full:
+        return run(weak_nodes=(1, 2, 4, 8, 16), n_tasks=128)
+    return run(weak_nodes=(1, 2, 4, 8), n_tasks=64)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(full="--full" in sys.argv, smoke="--smoke" in sys.argv)

@@ -1,10 +1,15 @@
 """Benchmark driver: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV summary rows (plus per-experiment
-CSV files under artifacts/bench/).  ``--full`` uses the paper's task counts.
+CSV files under artifacts/bench/).  ``--full`` uses the paper's task counts;
+``--smoke`` runs a CI-sized subset (tiny task counts, virtual-clock elastic
+run) and writes the summary to ``artifacts/bench/BENCH_smoke.json`` so every
+PR captures its perf trajectory as a workflow artifact.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -20,13 +25,77 @@ def _summary(name: str, rows: list[dict], key: str = "th_tasks_per_s") -> str:
     return f"{name},{us_per_task:.2f},{derived}"
 
 
-def main() -> None:
-    full = "--full" in sys.argv
+def _exp6_summary(rows: list[dict]) -> str:
+    streaming_rows = [r for r in rows if r["mode"] == "streaming"]
+    mean_pod_ratio = sum(r["pod_ratio"] for r in streaming_rows) / max(len(streaming_rows), 1)
+    return (
+        f"exp6_streaming,{sum(r['n_submits'] for r in streaming_rows)},"
+        f"mean_pod_ratio={mean_pod_ratio:.2f}"
+    )
+
+
+def _exp7_summary(rows: list[dict]) -> str:
+    weak = [r for r in rows if r["mode"] == "weak"]
+    elastic = [r for r in rows if r["mode"] == "elastic"]
+    scaled = all(r["scaled_to_demand"] for r in weak) if weak else False
+    cost = elastic[0]["cost_vs_max_static"] if elastic else 1.0
+    return f"exp7_elastic,{len(weak)},scaled_to_demand={scaled}_cost_vs_static={cost:.3f}"
+
+
+def _write_bench_json(tag: str, out: list[str]) -> str:
+    """BENCH_<tag>.json: the per-PR perf-trajectory artifact CI uploads."""
+    from benchmarks.common import RESULT_DIR
+
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    path = os.path.join(RESULT_DIR, f"BENCH_{tag}.json")
+    rows = []
+    for line in out:
+        name, us, derived = line.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us), "derived": derived})
+    with open(path, "w") as f:
+        json.dump(
+            {"tag": tag, "unix_time": time.time(), "rows": rows},
+            f,
+            indent=2,
+        )
+    return path
+
+
+def run_smoke() -> list[str]:
+    """CI-sized: broker-core experiments only (no kernel/roofline sweeps),
+    tiny counts, and the elastic run entirely on a virtual clock."""
+    out = []
+
+    from benchmarks import exp1_per_provider, exp4_facts, exp6_streaming, exp7_elastic
+
+    print("== Exp 1 (smoke): per-provider scaling ==")
+    out.append(_summary("exp1_per_provider", exp1_per_provider.main(False)))
+
+    print("== Exp 4 (smoke): FACTS workflows ==")
+    r4 = exp4_facts.main(False)
+    ovh_fracs = [r["ovh_frac"] for r in r4]
+    out.append(
+        f"exp4_facts,{sum(r['ttx_s'] for r in r4)/len(r4)*1e6:.0f},"
+        f"mean_ovh_frac={sum(ovh_fracs)/len(ovh_fracs):.4f}"
+    )
+
+    print("== Exp 6 (smoke): streaming vs frontier ==")
+    out.append(_exp6_summary(exp6_streaming.main(False)))
+
+    print("== Exp 7 (smoke): elastic acquisition ==")
+    out.append(_exp7_summary(exp7_elastic.main(smoke=True)))
+
+    path = _write_bench_json("smoke", out)
+    print(f"\nwrote {path}")
+    return out
+
+
+def run_all(full: bool) -> list[str]:
     out = []
 
     from benchmarks import exp1_per_provider, exp2_cross_provider, exp3a_cross_platform
     from benchmarks import exp3b_heterogeneous, exp4_facts, exp5_groups, exp6_streaming
-    from benchmarks import kernels_bench, roofline_report
+    from benchmarks import exp7_elastic, kernels_bench, roofline_report
 
     print("== Exp 1: per-provider scaling (OVH/TH/TPT, MCPP vs SCPP) ==")
     r1 = exp1_per_provider.main(full)
@@ -47,19 +116,20 @@ def main() -> None:
     print("== Exp 4: FACTS workflows ==")
     r4 = exp4_facts.main(full)
     ovh_fracs = [r["ovh_frac"] for r in r4]
-    out.append(f"exp4_facts,{sum(r['ttx_s'] for r in r4)/len(r4)*1e6:.0f},mean_ovh_frac={sum(ovh_fracs)/len(ovh_fracs):.4f}")
+    out.append(
+        f"exp4_facts,{sum(r['ttx_s'] for r in r4)/len(r4)*1e6:.0f},"
+        f"mean_ovh_frac={sum(ovh_fracs)/len(ovh_fracs):.4f}"
+    )
 
     print("== Exp 5: provider groups (balanced TPT + failover OVH) ==")
     r5 = exp5_groups.main(full)
     out.append(_summary("exp5_groups", r5))
 
     print("== Exp 6: streaming vs frontier DAG dispatch ==")
-    r6 = exp6_streaming.main(full)
-    streaming_rows = [r for r in r6 if r["mode"] == "streaming"]
-    mean_pod_ratio = sum(r["pod_ratio"] for r in streaming_rows) / max(len(streaming_rows), 1)
-    out.append(
-        f"exp6_streaming,{sum(r['n_submits'] for r in streaming_rows)},mean_pod_ratio={mean_pod_ratio:.2f}"
-    )
+    out.append(_exp6_summary(exp6_streaming.main(full)))
+
+    print("== Exp 7: elastic acquisition (weak scaling + cost curve) ==")
+    out.append(_exp7_summary(exp7_elastic.main(full)))
 
     print("== Kernel micro-benchmarks ==")
     for name, us, derived in kernels_bench.main(full):
@@ -71,6 +141,15 @@ def main() -> None:
         mean_mfu = sum(r["mfu_est"] for r in rl) / len(rl)
         out.append(f"roofline_cells,{len(rl)},mean_mfu_est={mean_mfu:.4f}")
 
+    _write_bench_json("full" if full else "default", out)
+    return out
+
+
+def main() -> None:
+    if "--smoke" in sys.argv:
+        out = run_smoke()
+    else:
+        out = run_all("--full" in sys.argv)
     print("\nname,us_per_call,derived")
     for line in out:
         print(line)

@@ -24,7 +24,6 @@ from typing import Any, Optional
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 
 def _flatten(tree) -> dict[str, Any]:

@@ -15,8 +15,8 @@ Shapes (assigned):
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Any
 
 import jax.numpy as jnp
 

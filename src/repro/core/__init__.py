@@ -1,4 +1,12 @@
 """Hydra broker core: the paper's contribution as a composable module."""
+from repro.core.autoscaler import (
+    Autoscaler,
+    LatencyModel,
+    LaunchSpec,
+    ProviderPool,
+    cloud_startup,
+    hpc_queue_wait,
+)
 from repro.core.broker import Hydra, Submission
 from repro.core.dispatcher import StreamingDispatcher
 from repro.core.fault import BreakerState, CircuitBreaker
@@ -10,8 +18,14 @@ from repro.core.resource import ResourceRequest
 from repro.core.task import Resources, Task, TaskState
 
 __all__ = [
+    "Autoscaler",
     "BreakerState",
     "CircuitBreaker",
+    "LatencyModel",
+    "LaunchSpec",
+    "ProviderPool",
+    "cloud_startup",
+    "hpc_queue_wait",
     "GroupExhausted",
     "GroupMember",
     "Hydra",

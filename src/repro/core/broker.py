@@ -27,6 +27,7 @@ from __future__ import annotations
 import os
 import tempfile
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
 from typing import Optional
 
@@ -85,7 +86,17 @@ class Submission:
 
                     for t in unresolved:  # fires immediately if already resolved
                         t.add_done_callback(_one_done)
-        return guard_wait(self._all_done, timeout)
+
+        def _in_flight() -> bool:
+            # tasks on their way to / executing on a provider: the guard's
+            # virtual-idle valve must stay closed while pure-CPU work (which
+            # never touches the clock) is still running (runtime/clock.py)
+            return any(
+                t.tstate in (TaskState.PARTITIONED, TaskState.SUBMITTED, TaskState.RUNNING)
+                for t in self.tasks
+            )
+
+        return guard_wait(self._all_done, timeout, in_flight=_in_flight)
 
     def metrics(self) -> Metrics:
         return compute_metrics(self.run_trace, self.tasks, self.pods)
@@ -134,6 +145,14 @@ class Hydra:
         self._claimed: set[str] = set()  # task uids currently being re-bound
         self._dispatch = ThreadPoolExecutor(max_workers=8, thread_name_prefix="hydra-dispatch")
         self._submissions: list[Submission] = []
+        # elastic acquisition state (core/autoscaler.py): providers that have
+        # been *requested* but are still inside their modeled startup/queue
+        # latency.  The dispatcher reads incoming_slots() so it neither fails
+        # momentarily-unplaceable tasks nor under-sizes batches while
+        # capacity is on its way.
+        self._pending_acquisitions: dict[str, dict] = {}
+        self._backlog_cache: Optional[tuple] = None  # (real_time, count)
+        self.autoscaler = None  # attached via autoscale()
         self.watchdog: Optional[StragglerWatchdog] = None
         if enable_straggler_mitigation:
             self.watchdog = StragglerWatchdog(
@@ -169,15 +188,64 @@ class Hydra:
 
     def idle_slots(self) -> int:
         """Free execution slots across healthy bind targets: the streaming
-        dispatcher's backfill hint (group members report slots minus
-        outstanding load; ungrouped providers report their static slots)."""
+        dispatcher's backfill hint.  Group members report slots minus
+        outstanding load; ungrouped providers report slots minus the
+        broker-tracked outstanding count (ProviderHandle.outstanding), so a
+        saturated provider genuinely reads as 0 free slots — which is what
+        lets the elastic throttle hold work back for capacity that is still
+        coming up instead of burying the busy provider's internal queue."""
         total = 0
         for target in self.proxy.bind_targets():
             if isinstance(target, ProviderGroup):
                 total += target.idle_slots()
             else:
+                slots = max(1, target.spec.concurrency * target.spec.n_nodes)
+                total += max(0, slots - target.outstanding)
+        return total
+
+    def _provider_load(self, name: str, delta: int) -> None:
+        """Outstanding-task accounting for ungrouped providers."""
+        try:
+            handle = self.proxy.get(name)
+        except KeyError:  # elastically deregistered: nothing to track
+            return
+        with self._lock:
+            handle.outstanding = max(0, handle.outstanding + delta)
+
+    def total_slots(self) -> int:
+        """Live execution slots across healthy bind targets (for groups:
+        breaker-available members only — a tripped member's slots are *gone*
+        from supply, which is exactly the signal that makes the autoscaler
+        replace broken capacity)."""
+        total = 0
+        for target in self.proxy.bind_targets():
+            if isinstance(target, ProviderGroup):
+                total += sum(m.slots for m in target.available_members())
+            else:
                 total += max(1, target.spec.concurrency * target.spec.n_nodes)
         return total
+
+    def backlog(self) -> int:
+        """Unfinished tasks the brokered providers still owe (dispatched or
+        queued inside managers).  Queue *pressure* is backlog + ready-queue
+        depth against live + incoming slots: the ready queue alone empties
+        fast into manager-internal queues, so it under-reports sustained
+        overload.
+
+        Called every autoscaler tick: the count runs on a SNAPSHOT of the
+        submission list (tstate reads are lock-free) and is cached for a
+        short real-time window, so a 10k-task scan never serializes against
+        the hot submit/dispatch paths under the broker lock."""
+        now_r = time.monotonic()
+        with self._lock:
+            cached = self._backlog_cache
+            if cached is not None and now_r - cached[0] < 0.05:
+                return cached[1]
+            subs = list(self._submissions)
+        n = sum(1 for sub in subs for t in sub.tasks if not t.final)
+        with self._lock:
+            self._backlog_cache = (now_r, n)
+        return n
 
     def stream_stats(self) -> dict:
         """Dispatcher-side metrics + total pipeline rounds (exp6)."""
@@ -185,6 +253,110 @@ class Hydra:
         with self._lock:
             stats["n_submits"] = self.n_submits
             stats["n_pods"] = self.n_pods_total  # cumulative, prune-proof
+        return stats
+
+    # ------------------------------------------------------------------
+    # Elastic acquisition (core/autoscaler.py drives these)
+    # ------------------------------------------------------------------
+    def autoscale(self, pool, **kw):
+        """Attach an Autoscaler watching this broker's queue pressure and
+        elastically acquiring/releasing providers from ``pool`` (a
+        ProviderPool of launchable specs).  Returns the started Autoscaler;
+        shutdown() stops it with the rest of the broker."""
+        from repro.core.autoscaler import Autoscaler
+
+        if self.autoscaler is not None:
+            raise RuntimeError("an autoscaler is already attached")
+        self.autoscaler = Autoscaler(self, pool, **kw).start()
+        return self.autoscaler
+
+    def begin_acquisition(self, spec: ProviderSpec, eta_s: float, group: Optional[str] = None):
+        """Record a provider as in-flight (requested, not yet up)."""
+        with self._lock:
+            self._pending_acquisitions[spec.name] = {
+                "platform": spec.platform,
+                "slots": max(1, spec.concurrency * spec.n_nodes),
+                "capacity": spec.capacity(),
+                "eta_s": eta_s,
+                "requested_at": now(),
+                "group": group,
+            }
+
+    def complete_acquisition(self, spec: ProviderSpec) -> Optional[ProviderHandle]:
+        """The modeled acquisition latency elapsed: the provider is live.
+        Registers it (joining its target group, if any) and clears the
+        pending record.  A cancelled acquisition (record already gone) is a
+        no-op so a release racing an arrival cannot register a zombie; a
+        failed group join rolls the registration back entirely so a
+        misconfigured launch spec cannot leak half-joined providers into
+        the direct-binding pool."""
+        with self._lock:
+            info = self._pending_acquisitions.pop(spec.name, None)
+        if info is None:
+            return None
+        handle = self.register_provider(spec)
+        group_name = info.get("group")
+        if group_name is not None:
+            try:
+                group = self.proxy.get_group(group_name)
+                group.add_member(handle)
+                try:
+                    self.proxy.attach_member(group_name, spec.name)
+                except Exception:
+                    group.remove_member(spec.name)
+                    raise
+            except Exception:
+                self._rollback_registration(spec.name)
+                raise
+        return handle
+
+    def _rollback_registration(self, name: str) -> None:
+        with self._lock:
+            mgr = self._managers.pop(name, None)
+        if mgr is not None:
+            mgr.shutdown(wait=False)
+        try:
+            self.proxy.deregister(name)
+        except KeyError:
+            pass
+
+    def abort_acquisition(self, name: str) -> bool:
+        """Drop a pending acquisition (scale-in decided before arrival)."""
+        with self._lock:
+            return self._pending_acquisitions.pop(name, None) is not None
+
+    def incoming_slots(self) -> int:
+        """Execution slots currently inside their modeled acquisition
+        latency: counted as supply by the dispatcher and the autoscaler so
+        sustained pressure does not over-acquire."""
+        with self._lock:
+            return sum(p["slots"] for p in self._pending_acquisitions.values())
+
+    def pending_acquisitions(self) -> list[dict]:
+        with self._lock:
+            return [dict(name=n, **p) for n, p in self._pending_acquisitions.items()]
+
+    def incoming_could_fit(self, task: Task) -> bool:
+        """Would any in-flight acquisition be able to run ``task``?  Gates
+        the dispatcher's defer-instead-of-fail path: a task no arriving
+        provider can fit must surface its NoEligibleProvider now, not after
+        every acquisition has landed."""
+        with self._lock:
+            caps = [p["capacity"] for p in self._pending_acquisitions.values()]
+        return any(task.resources.fits(cap) for cap in caps)
+
+    def scale_stats(self) -> dict:
+        """One snapshot of the elastic state: live/incoming capacity, queue
+        pressure inputs, and the autoscaler's own counters when attached."""
+        stats = {
+            "n_providers": len(self.providers()),
+            "idle_slots": self.idle_slots(),
+            "incoming_slots": self.incoming_slots(),
+            "pending_acquisitions": self.pending_acquisitions(),
+            "queue_depth": self._dispatcher.pending() if self._dispatcher else 0,
+        }
+        if self.autoscaler is not None:
+            stats["autoscaler"] = self.autoscaler.stats()
         return stats
 
     def _prune_finished_submissions(self) -> None:
@@ -274,12 +446,16 @@ class Hydra:
                     pass
             raise
 
-    def remove_provider(self, name: str, drain: bool = True):
-        """Elastic scale-down: stop a provider; re-bind its unfinished tasks."""
+    def remove_provider(self, name: str, drain: bool = True, deregister: bool = False):
+        """Elastic scale-down: stop a provider; re-bind its unfinished tasks.
+        ``deregister=True`` (the autoscaler's release path) also frees the
+        name in the proxy and drops the policy's per-provider state, so a
+        later acquisition may recycle the slot cleanly."""
         with self._lock:
             mgr = self._managers.pop(name)
             handle = self.proxy.get(name)
             handle.healthy = False
+            handle.outstanding = 0
         mgr.fail()  # reject anything in flight
         if handle.group is not None:
             group = self.proxy.get_group(handle.group)
@@ -294,6 +470,12 @@ class Hydra:
                 orphans = self._collect_orphans(name)
                 self._rebind_and_resubmit(orphans, exclude=name)
         mgr.shutdown(wait=drain)
+        if deregister:
+            self.policy.forget(name)
+            try:
+                self.proxy.deregister(name)
+            except KeyError:
+                pass
 
     def providers(self) -> list[str]:
         return [h.name for h in self.proxy.healthy()]
@@ -424,6 +606,7 @@ class Hydra:
         if self.proxy.is_group(name):
             self._submit_to_group(self.proxy.get_group(name), pods)
             return
+        self._provider_load(name, sum(len(p.tasks) for p in pods))
         try:
             self._managers[name].submit_pods(pods)
         except ProviderDown:
@@ -526,6 +709,8 @@ class Hydra:
         # policies observe the *logical* bound name: member churn inside a
         # group must not leak into policy load/EWMA accounting
         logical = task.group or provider
+        if task.group is None:
+            self._provider_load(provider, -1)
         t0, t1 = task.trace.first("exec_start"), task.trace.last("exec_done")
         if t0 is not None and t1 is not None:
             self.policy.observe(logical, t1 - t0)
@@ -571,13 +756,20 @@ class Hydra:
         failover race): release the member's load slot."""
         if task.group and self.proxy.is_group(task.group):
             self.proxy.get_group(task.group).record_skip(provider)
+        elif task.group is None:
+            self._provider_load(provider, -1)
 
     def _handle_provider_down(self, name: str):
         with self._lock:
             handle = self.proxy.get(name)
+            handle.outstanding = 0  # a dead provider owes nothing dispatchable
             if handle.healthy:
                 handle.healthy = False
                 handle.trace.add("blacklisted")
+        if self.autoscaler is not None:
+            # a blacklisted elastic instance must stop occupying pool
+            # headroom, or broken capacity could never be replaced
+            self.autoscaler.note_provider_lost(name)
         # always sweep for orphans: late ProviderDown failures arrive after
         # the initial blacklisting and still need re-binding
         with self._fault_lock:
@@ -700,6 +892,8 @@ class Hydra:
     # ------------------------------------------------------------------
     def shutdown(self, wait: bool = True):
         """Graceful teardown of every instantiated resource (paper §3.2)."""
+        if self.autoscaler is not None:
+            self.autoscaler.stop(wait=wait)
         if self._dispatcher is not None:
             self._dispatcher.stop(wait=wait)
         if self.watchdog:

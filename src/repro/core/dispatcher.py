@@ -123,6 +123,14 @@ class StreamingDispatcher:
         with self._lock:
             return len(self._pending)
 
+    def queue_pressure(self) -> float:
+        """Demand over supply: ready-queue depth / (idle + incoming slots).
+        THE autoscaler input (core/autoscaler.py): > 1 means the queue could
+        not be absorbed even if every free and in-acquisition slot took one
+        task; ~0 means the pool is idle."""
+        supply = self.broker.idle_slots() + self.broker.incoming_slots()
+        return self.pending() / max(supply, 1)
+
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until the queue is empty and no batch is in flight (tests)."""
         return self._idle.wait(timeout)
@@ -150,6 +158,12 @@ class StreamingDispatcher:
                     batch = self._take_batch()
                 if batch:
                     self._dispatch(batch)
+                elif self.pending():
+                    # saturated under the elastic throttle: provider arrival
+                    # sets _wake (Autoscaler._arrive) and wakes us instantly;
+                    # completions don't signal, so bound the wait in real time
+                    self._wake.clear()
+                    self._wake.wait(0.02)
             except Exception:
                 # the loop is the broker's lifeline: a raced completion or a
                 # recovery-path error must never kill the dispatcher thread.
@@ -160,8 +174,19 @@ class StreamingDispatcher:
 
     def _take_batch(self) -> list[Task]:
         """Drain up to the batch budget, shallow DAG depth first (backfill:
-        deeper-workflow tasks fill whatever capacity the frontier leaves)."""
-        budget = min(self.max_batch, max(self.broker.idle_slots(), self.min_batch))
+        deeper-workflow tasks fill whatever capacity the frontier leaves).
+
+        With an autoscaler attached the budget is capped at the pool's
+        actually-free slots: work held back here is precisely the queue
+        pressure that buys new providers, and late binding hands it to the
+        arriving capacity instead of burying a busy provider's internal
+        queue with everything up front."""
+        if self.broker.autoscaler is not None:
+            budget = min(self.max_batch, self.broker.idle_slots())
+            if budget <= 0:
+                return []
+        else:
+            budget = min(self.max_batch, max(self.broker.idle_slots(), self.min_batch))
         batch: list[Task] = []
         with self._lock:
             while self._pending and len(batch) < budget:
@@ -186,6 +211,7 @@ class StreamingDispatcher:
             # eligibility before any stateful binding, so no load accounting
             # leaked): fail only the offenders, stream the rest through
             placeable = []
+            deferred = False
             targets = self.broker.proxy.bind_targets()
             if not targets:  # raced into a full outage: transient, not fatal
                 self._retry(batch)
@@ -195,10 +221,19 @@ class StreamingDispatcher:
                     self.broker.policy._eligible(t, targets)
                     placeable.append(t)
                 except NoEligibleProvider as exc:
-                    self._fail_task(t, exc)  # surface the typed error
+                    if self.broker.incoming_could_fit(t):
+                        # capacity that can actually RUN this task is
+                        # mid-acquisition (core/autoscaler.py): keep it
+                        # queued instead of terminally failing it
+                        placeable.append(t)
+                        deferred = True
+                    else:
+                        self._fail_task(t, exc)  # surface the typed error
             self.retry_backoffs += 1
             if placeable:
                 self.enqueue(placeable)
+            if deferred:
+                self._stop.wait(0.01)  # don't hot-spin while capacity boots
             return
         except Exception as exc:
             self._retry(batch, exc)
@@ -230,9 +265,14 @@ class StreamingDispatcher:
                 # release the policy's load accounting before re-binding
                 self.broker.policy.unbind(t)
             requeueable.append(t)
-        if self._consecutive_failures > self.max_consecutive_failures and exc is not None:
+        if (
+            self._consecutive_failures > self.max_consecutive_failures
+            and exc is not None
+            and self.broker.incoming_slots() == 0
+        ):
             # a persistent outage (counter resets on any success): surface
-            # instead of spinning forever
+            # instead of spinning forever — unless replacement capacity is
+            # already mid-acquisition, in which case the outage is ending
             for t in requeueable:
                 self._fail_task(t, exc)
             return
@@ -256,6 +296,8 @@ class StreamingDispatcher:
             "tasks_dispatched": self.tasks_dispatched,
             "mean_batch_size": round(self.tasks_dispatched / max(self.batches, 1), 2),
             "pending": self.pending(),
+            "queue_pressure": round(self.queue_pressure(), 3),
+            "incoming_slots": self.broker.incoming_slots(),
             "retry_backoffs": self.retry_backoffs,
             "loop_errors": self.loop_errors,
             "batch_window_s": self.batch_window,

@@ -30,7 +30,7 @@ import threading
 from enum import Enum
 from typing import Callable, Optional
 
-from repro.core.task import Task, TaskState
+from repro.core.task import Task
 from repro.runtime.clock import get_clock
 from repro.runtime.tracing import now
 

@@ -156,17 +156,12 @@ class ProviderGroup:
         self.trace = Trace()
         self._lock = threading.Lock()
         self._members: dict[str, GroupMember] = {}
+        # breaker config is remembered so members that JOIN a live group
+        # (elastic scale-out, core/autoscaler.py) get identical protection
+        self._failure_threshold = failure_threshold
+        self._reset_timeout_s = reset_timeout_s
         for h in handles:
-            cap = h.spec.capacity()
-            self._members[h.name] = GroupMember(
-                name=h.name,
-                weight=float(cap.cpus + cap.accels),
-                slots=max(1, h.spec.concurrency * h.spec.n_nodes),
-                breaker=CircuitBreaker(
-                    failure_threshold=failure_threshold,
-                    reset_timeout_s=reset_timeout_s,
-                ),
-            )
+            self._members[h.name] = self._make_member(h)
         # synthetic spec: element-wise max member capacity, so a task fits
         # the group iff it fits the largest member
         self.spec = ProviderSpec(
@@ -181,6 +176,18 @@ class ProviderGroup:
             n_nodes=1,
         )
         self.trace.add("group_created")
+
+    def _make_member(self, h: ProviderHandle) -> GroupMember:
+        cap = h.spec.capacity()
+        return GroupMember(
+            name=h.name,
+            weight=float(cap.cpus + cap.accels),
+            slots=max(1, h.spec.concurrency * h.spec.n_nodes),
+            breaker=CircuitBreaker(
+                failure_threshold=self._failure_threshold,
+                reset_timeout_s=self._reset_timeout_s,
+            ),
+        )
 
     # -- membership ------------------------------------------------------
     @property
@@ -299,6 +306,32 @@ class ProviderGroup:
             m.outstanding = 0
         if was != BreakerState.OPEN:
             self.trace.add(f"breaker_open:{member}")
+
+    def add_member(self, handle: ProviderHandle) -> GroupMember:
+        """Dynamic member join on a LIVE group (elastic scale-out): the new
+        member enters rotation with a fresh breaker and inherits the group's
+        breaker config.  The synthetic spec grows element-wise so tasks that
+        fit the new (possibly larger) member become eligible mid-run."""
+        if handle.spec.platform != self.spec.platform:
+            raise ValidationError(
+                f"group {self.name!r}: member {handle.name!r} platform "
+                f"{handle.spec.platform!r} != group platform {self.spec.platform!r}"
+            )
+        with self._lock:
+            if handle.name in self._members:
+                raise ValidationError(
+                    f"group {self.name!r}: member {handle.name!r} already present"
+                )
+            member = self._make_member(handle)
+            self._members[handle.name] = member
+            cap, have = handle.spec.capacity(), self.spec.node_capacity
+            self.spec.node_capacity = Resources(
+                cpus=max(have.cpus, cap.cpus),
+                accels=max(have.accels, cap.accels),
+                memory_mb=max(have.memory_mb, cap.memory_mb),
+            )
+        self.trace.add(f"member_joined:{handle.name}")
+        return member
 
     def remove_member(self, name: str) -> None:
         """Permanently drop a member (elastic removal): it leaves rotation

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import os
 import shutil
-from typing import Optional
 
 from repro.runtime.tracing import Trace
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 from repro.core.managers.compute import COMPUTE_RUNTIME, ProviderDown
 from repro.core.pod import Pod

@@ -290,13 +290,23 @@ class WorkflowManager:
             # multiply the real-time bound by the number of workflows
             v_deadline = None if timeout is None else now() + timeout
             r_deadline = None if timeout is None else time.monotonic() + timeout
+
+            def _in_flight() -> bool:
+                # keeps guard_wait's virtual-idle valve closed while any
+                # task is executing real (non-clock) work on a provider
+                return any(
+                    t.tstate
+                    in (TaskState.PARTITIONED, TaskState.SUBMITTED, TaskState.RUNNING)
+                    for _, t in by_uid.values()
+                )
+
             for wf in workflows:
                 left = (
                     None
                     if timeout is None
                     else max(0.0, min(v_deadline - now(), r_deadline - time.monotonic()))
                 )
-                guard_wait(done_events[wf.name], left)
+                guard_wait(done_events[wf.name], left, in_flight=_in_flight)
         return workflows
 
     def _submit(self, tasks: list[Task]):

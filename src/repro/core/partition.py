@@ -56,6 +56,8 @@ def _binpack(tasks: list[Task], provider: str, cap: Resources) -> list[Pod]:
                 raise ValueError(
                     f"task {t.uid} requires {vars(t.resources)} exceeding pod capacity {vars(cap)}"
                 )
-            free = Resources(cap.cpus - t.resources.cpus, cap.accels - t.resources.accels, cap.memory_mb - t.resources.memory_mb)
+            free = Resources(
+                cap.cpus - t.resources.cpus, cap.accels - t.resources.accels, cap.memory_mb - t.resources.memory_mb
+            )
             bins.append((free, [t]))
     return [Pod(provider, members, "binpack") for _, members in bins]

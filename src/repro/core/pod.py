@@ -14,8 +14,6 @@ from __future__ import annotations
 
 import json
 import os
-import threading
-from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.task import Task, describe

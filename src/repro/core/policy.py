@@ -80,6 +80,11 @@ class Policy:
         double-count).  ``name`` overrides the bound name for tasks whose
         provider attribute was never updated (mid-bind aborts)."""
 
+    def forget(self, name: str) -> None:
+        """Drop all accumulated state for a released provider (elastic
+        scale-in).  Without this, a re-acquired instance under a recycled
+        name would inherit the dead instance's load/EWMA history."""
+
     def _eligible(self, task: Task, providers: list) -> list:
         """Targets that can fit the task (a pin may name a group too)."""
         if task.pinned_provider:
@@ -143,6 +148,10 @@ class LoadAwarePolicy(Policy):
             with self._lock:
                 self.outstanding[name] = max(0, self.outstanding[name] - 1)
 
+    def forget(self, name: str) -> None:
+        with self._lock:
+            self.outstanding.pop(name, None)
+
 
 class AdaptivePolicy(Policy):
     """Throughput-weighted binding (beyond-paper: the paper's future work).
@@ -161,8 +170,15 @@ class AdaptivePolicy(Policy):
 
     def _choose(self, task: Task, ok: list) -> str:
         with self._lock:
+            # neutral prior for providers with no history yet: a member that
+            # appeared mid-run (elastic scale-out) is assumed as fast as the
+            # current fleet average, not 1000x faster — an optimistic default
+            # would flood brand-new capacity before its first completion
+            known = [v for v in self.ewma.values() if v > 0]
+            prior = (sum(known) / len(known)) if known else 1e-3
+
             def score(p: ProviderHandle) -> float:
-                rate = 1.0 / max(self.ewma.get(p.name, 1e-3), 1e-6)
+                rate = 1.0 / max(self.ewma.get(p.name, prior), 1e-6)
                 # expected finish time ~ (queue + 1) / service rate
                 return (self.outstanding[p.name] + 1) / rate
 
@@ -184,6 +200,11 @@ class AdaptivePolicy(Policy):
         if name:
             with self._lock:
                 self.outstanding[name] = max(0, self.outstanding[name] - 1)
+
+    def forget(self, name: str) -> None:
+        with self._lock:
+            self.ewma.pop(name, None)
+            self.outstanding.pop(name, None)
 
 
 POLICIES = {

@@ -67,6 +67,10 @@ class ProviderHandle:
     devices: list = field(default_factory=list)
     healthy: bool = True
     group: Optional[str] = None
+    # tasks dispatched to this (ungrouped) provider and not yet finished:
+    # maintained by the broker, feeds the load-aware idle_slots() hint.
+    # Grouped members track load in their GroupMember instead.
+    outstanding: int = 0
     trace: Trace = field(default_factory=Trace)
 
     @property
@@ -132,6 +136,25 @@ class ProviderProxy:
             for member in group.member_names:
                 self._providers[member].group = group.name
             self._groups[group.name] = group
+
+    def attach_member(self, group_name: str, member_name: str) -> ProviderHandle:
+        """Wire an already-registered provider into a live group (elastic
+        scale-out: the group side is ProviderGroup.add_member).  The member
+        leaves the direct-binding pool, exactly as at group registration."""
+        with self._lock:
+            if group_name not in self._groups:
+                raise KeyError(f"unknown provider group {group_name!r}")
+            h = self._providers.get(member_name)
+            if h is None:
+                raise ValidationError(
+                    f"group {group_name!r}: member {member_name!r} is not a registered provider"
+                )
+            if h.group is not None:
+                raise ValidationError(
+                    f"group {group_name!r}: member {member_name!r} already in group {h.group!r}"
+                )
+            h.group = group_name
+            return h
 
     def get_group(self, name: str):
         g = self._groups.get(name)

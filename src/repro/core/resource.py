@@ -7,7 +7,6 @@ The Service Proxy turns an accepted ResourceRequest into live services.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 from repro.core.task import Resources
 

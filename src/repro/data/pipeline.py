@@ -10,12 +10,11 @@ from __future__ import annotations
 import queue
 import threading
 from dataclasses import dataclass
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 
 @dataclass(frozen=True)

@@ -20,7 +20,6 @@ paper runs 50-800).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import numpy as np
 

@@ -8,7 +8,6 @@ store - the same pattern Hydra uses with cloud object stores.
 """
 from __future__ import annotations
 
-import io
 import pickle
 from typing import Optional
 

@@ -20,7 +20,7 @@ import argparse
 import json
 import time
 import traceback
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -29,7 +29,6 @@ from repro.configs import get_arch, get_shape, token_batch_spec, ARCHS, SHAPES
 from repro.compat import compat_cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import Model
-from repro.models.spec import tree_sds
 from repro.optim import adamw
 from repro.parallel.sharding import STRATEGIES, default_strategy, mesh_axis_sizes, resolve_axes
 from repro.roofline.hlo import parse_collectives, parse_hbm_traffic

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional
 
 import numpy as np
 
@@ -16,9 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.launch.mesh import make_local_mesh
 from repro.models.model import Model
-from repro.parallel.sharding import STRATEGIES, default_strategy
 
 
 def serve(

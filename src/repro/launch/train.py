@@ -14,7 +14,6 @@ Production semantics on a real fleet, CPU-sized defaults here:
 from __future__ import annotations
 
 import argparse
-import os
 import time
 from typing import Optional
 
@@ -22,7 +21,7 @@ import jax
 
 from repro.ckpt import checkpoint as ckpt_lib
 from repro.configs import get_arch
-from repro.data.pipeline import DataConfig, Prefetcher, batch_at
+from repro.data.pipeline import DataConfig, Prefetcher
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import Model
 from repro.optim import adamw

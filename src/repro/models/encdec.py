@@ -6,7 +6,7 @@ a bidirectional encoder + causal decoder with cross-attention.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

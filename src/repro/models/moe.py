@@ -11,7 +11,6 @@ group size).
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,6 @@ from repro.models.transformer import (
     _head,
     attn_specs,
     cache_specs as dense_cache_specs,
-    self_attn_block_decode,
     write_cache,
 )
 from repro.parallel.sharding import shard_x

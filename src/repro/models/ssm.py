@@ -12,7 +12,7 @@ kernels/selective_scan.py; this module is the XLA lowering / oracle path.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -180,7 +180,9 @@ def cache_specs(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
     return {
         "layers": {
             "h": ParamSpec((L, batch, di, N), ("layers", "cache_batch", "ssm_inner_act", None), "float32", "zeros"),
-            "conv": ParamSpec((L, batch, K - 1, di), ("layers", "cache_batch", None, "ssm_inner_act"), cfg.compute_dtype, "zeros"),
+            "conv": ParamSpec(
+                (L, batch, K - 1, di), ("layers", "cache_batch", None, "ssm_inner_act"), cfg.compute_dtype, "zeros"
+            ),
         }
     }
 

@@ -164,8 +164,12 @@ def cache_specs(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
     dt = cfg.compute_dtype
     return {
         "layers": {
-            "k": ParamSpec((L, batch, cache_len, KV, hd), ("layers", "cache_batch", "cache_seq", "kv_heads_act", None), dt, "zeros"),
-            "v": ParamSpec((L, batch, cache_len, KV, hd), ("layers", "cache_batch", "cache_seq", "kv_heads_act", None), dt, "zeros"),
+            "k": ParamSpec(
+                (L, batch, cache_len, KV, hd), ("layers", "cache_batch", "cache_seq", "kv_heads_act", None), dt, "zeros"
+            ),
+            "v": ParamSpec(
+                (L, batch, cache_len, KV, hd), ("layers", "cache_batch", "cache_seq", "kv_heads_act", None), dt, "zeros"
+            ),
         }
     }
 

@@ -8,14 +8,14 @@ the lowered HLO stays O(1) in depth.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import attention as attn
-from repro.models.layers import apply_rope, embed_tokens, rms_norm, scan_layers, scan_layers_carry, swiglu
+from repro.models.layers import embed_tokens, rms_norm, scan_layers, scan_layers_carry, swiglu
 from repro.models.spec import ParamSpec, dense, stacked
 from repro.models.transformer import (
     _head,

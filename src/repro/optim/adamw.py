@@ -8,7 +8,6 @@ state sharding stays fully under our control for the dry-run.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ keeps the compressed SGD/Adam iteration convergent (Karimireddy et al. 2019).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

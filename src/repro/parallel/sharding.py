@@ -10,7 +10,7 @@ data-parallel axis crossing the inter-pod DCI links.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Union
 
 import jax

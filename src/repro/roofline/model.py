@@ -17,7 +17,6 @@ remat/redundancy waste.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

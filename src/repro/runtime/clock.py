@@ -31,11 +31,38 @@ import heapq
 import threading
 import time
 from contextlib import contextmanager
-from typing import Optional
+from typing import Callable, Optional
+
+
+class ScheduledCall:
+    """Handle for a ``Clock.call_later`` registration: cancellable once."""
+
+    def __init__(self, deadline: float, fn: Callable[[], None]):
+        self.deadline = deadline
+        self._fn: Optional[Callable[[], None]] = fn
+        self._lock = threading.Lock()
+
+    def cancel(self) -> bool:
+        """Prevent the callback from firing; True iff it had not fired yet."""
+        with self._lock:
+            fired = self._fn is None
+            self._fn = None
+            return not fired
+
+    @property
+    def active(self) -> bool:
+        with self._lock:
+            return self._fn is not None
+
+    def _fire(self) -> None:
+        with self._lock:
+            fn, self._fn = self._fn, None
+        if fn is not None:
+            fn()
 
 
 class Clock:
-    """Interface: the broker core only ever uses these four methods."""
+    """Interface: the broker core only ever uses these five methods."""
 
     name = "base"
 
@@ -47,6 +74,12 @@ class Clock:
 
     def wait_event(self, event: threading.Event, timeout: Optional[float] = None) -> bool:
         """``event.wait(timeout)`` with the timeout measured on THIS clock."""
+        raise NotImplementedError
+
+    def call_later(self, delay: float, fn: Callable[[], None]) -> ScheduledCall:
+        """Schedule ``fn()`` to run once, ``delay`` clock-seconds from now
+        (the autoscaler's acquisition-completion path).  The callback runs on
+        a clock-owned thread and must not ``sleep()`` on this same clock."""
         raise NotImplementedError
 
     @contextmanager
@@ -77,6 +110,13 @@ class WallClock(Clock):
     def wait_event(self, event: threading.Event, timeout: Optional[float] = None) -> bool:
         return event.wait(timeout)
 
+    def call_later(self, delay: float, fn: Callable[[], None]) -> ScheduledCall:
+        call = ScheduledCall(self.now() + max(0.0, delay), fn)
+        timer = threading.Timer(max(0.0, delay), call._fire)
+        timer.daemon = True
+        timer.start()
+        return call
+
 
 class VirtualClock(Clock):
     name = "virtual"
@@ -91,6 +131,8 @@ class VirtualClock(Clock):
         self._now = float(start)
         self._cond = threading.Condition()
         self._sleepers: list[float] = []  # heap of pending virtual deadlines
+        self._timers: list[tuple[float, int, ScheduledCall]] = []  # call_later heap
+        self._timer_seq = 0
         self._holds = 0  # active hold() scopes: advancement barrier
         self._closed = False
         self._poll_s = poll_s
@@ -110,21 +152,74 @@ class VirtualClock(Clock):
             return self._now
 
     def advance(self, dt: float) -> float:
-        """Manually move time forward and wake any due sleepers."""
+        """Manually move time forward and wake any due sleepers/timers."""
         with self._cond:
             self._now += max(0.0, dt)
+            due = self._pop_due_timers()
             self._cond.notify_all()
-            return self._now
+            t = self._now
+        for call in due:
+            call._fire()
+        return t
 
     def advance_to(self, t: float) -> float:
         with self._cond:
             self._now = max(self._now, t)
+            due = self._pop_due_timers()
             self._cond.notify_all()
-            return self._now
+            t = self._now
+        for call in due:
+            call._fire()
+        return t
 
     def pending_deadlines(self) -> int:
         with self._cond:
-            return len(self._sleepers)
+            self._purge_cancelled()
+            return len(self._sleepers) + len(self._timers)
+
+    # -- delayed callbacks -------------------------------------------------
+    def call_later(self, delay: float, fn: Callable[[], None]) -> ScheduledCall:
+        """Register a virtual-deadline callback: fired by advance()/the
+        auto-advancer once virtual time reaches it.  The deadline counts as a
+        pending deadline, so the advancer will jump to it when it is next."""
+        with self._cond:
+            call = ScheduledCall(self._now + max(0.0, delay), fn)
+            if self._closed:
+                call.cancel()  # a closed clock never fires
+                return call
+            if call.deadline <= self._now:
+                due = [call]
+            else:
+                self._timer_seq += 1
+                heapq.heappush(self._timers, (call.deadline, self._timer_seq, call))
+                due = []
+            self._cond.notify_all()
+        for c in due:
+            c._fire()
+        return call
+
+    def _pop_due_timers(self) -> list[ScheduledCall]:
+        # callers hold self._cond
+        due = []
+        while self._timers and self._timers[0][0] <= self._now:
+            due.append(heapq.heappop(self._timers)[2])
+        return due
+
+    def _purge_cancelled(self) -> None:
+        # callers hold self._cond: drop cancelled timers from the heap head
+        # so they cannot attract an advancer jump to a dead deadline
+        while self._timers and not self._timers[0][2].active:
+            heapq.heappop(self._timers)
+
+    def _earliest_deadline(self) -> Optional[float]:
+        # callers hold self._cond
+        self._purge_cancelled()
+        heads = []
+        if self._sleepers:
+            heads.append(self._sleepers[0])
+        if self._timers:
+            heads.append(self._timers[0][0])
+        return min(heads) if heads else None
 
     # -- virtual waiting -------------------------------------------------
     def sleep(self, duration: float) -> None:
@@ -182,9 +277,11 @@ class VirtualClock(Clock):
         held_polls = 0
         last_sig: Optional[tuple] = None
         while not self._stop.wait(self._poll_s):
+            fire: list[ScheduledCall] = []
             with self._cond:
                 self._drop_passed()
-                if not self._sleepers:
+                earliest = self._earliest_deadline()
+                if earliest is None:
                     stable, last_sig = 0, None
                     continue
                 if self._holds > 0 and held_polls < 100:
@@ -194,24 +291,32 @@ class VirtualClock(Clock):
                     stable, last_sig = 0, None
                     continue
                 held_polls = 0
-                sig = (len(self._sleepers), self._sleepers[0])
+                sig = (len(self._sleepers), len(self._timers), earliest)
                 stable = stable + 1 if sig == last_sig else 1
                 last_sig = sig
                 if stable >= self._stability_polls:
-                    self._now = max(self._now, self._sleepers[0])
+                    self._now = max(self._now, earliest)
                     self.advances += 1
                     stable, last_sig = 0, None
                     self._drop_passed()
+                    fire = self._pop_due_timers()
                     self._cond.notify_all()
+            for call in fire:  # outside the cond: callbacks may re-enter the clock
+                call._fire()
 
     def close(self) -> None:
-        """Stop the advancer and release every parked sleeper immediately."""
+        """Stop the advancer and release every parked sleeper immediately.
+        Unfired call_later registrations are dropped, not fired: the clock's
+        owner is tearing the world down."""
         self._stop.set()
         with self._cond:
             self._closed = True
             if self._sleepers:
                 self._now = max(self._now, max(self._sleepers))
                 self._sleepers.clear()
+            for _, _, call in self._timers:
+                call.cancel()
+            self._timers.clear()
             self._cond.notify_all()
         if self._advancer is not None:
             self._advancer.join(timeout=2.0)
@@ -242,26 +347,61 @@ def now() -> float:
     return _active.now()
 
 
-def guard_wait(event: threading.Event, timeout: Optional[float] = None) -> bool:
+def guard_wait(
+    event: threading.Event,
+    timeout: Optional[float] = None,
+    in_flight: Optional[Callable[[], bool]] = None,
+) -> bool:
     """Completion-event wait with a *guard* timeout (Submission.wait,
     WorkflowManager.run): returns when the event fires, or when the timeout
     elapses on EITHER the active clock or real time, whichever comes first.
 
-    Unlike ``Clock.wait_event`` this never registers the deadline as a
-    virtual sleeper: a guard must not invite the auto-advancer to jump to
-    the timeout while real (non-sleeping) work is still executing.  The
+    Unlike ``Clock.wait_event`` this does not eagerly register the deadline
+    as a virtual sleeper: a guard must not invite the auto-advancer to jump
+    to the timeout while real (non-sleeping) work is still executing.  The
     real-time bound is what keeps a frozen virtual clock from turning a
-    guard into an infinite hang."""
+    guard into an infinite hang.
+
+    Idle valve: when nothing at all is in flight on a virtual clock (no
+    pending sleeper/timer deadlines and virtual time not moving for a short
+    real-time grace window), no event source can exist that the guard would
+    be shielding — so the remaining timeout IS registered as a sleeper and
+    the guard elapses at the *virtual* deadline instead of burning the full
+    real-time budget (``Submission.wait(timeout=...)`` with no tasks in
+    flight used to block for ``timeout`` real seconds).
+
+    ``in_flight`` refines the valve for callers that can SEE their work:
+    while it returns True (e.g. a task is executing pure-CPU compute that
+    never touches the clock), the valve stays closed even though the clock
+    looks idle, so real work cannot be cut short by a phantom virtual
+    timeout."""
     clock = get_clock()
     if timeout is None or isinstance(clock, WallClock):
         return clock.wait_event(event, timeout)
     v_deadline = clock.now() + timeout
     r_deadline = time.monotonic() + timeout
+    idle_polls = 0
+    last_v = clock.now()
+    # the valve needs an auto-advancer to serve the registered deadline: on a
+    # manually-driven clock it would trade a bounded wait for a hang
+    auto = getattr(clock, "_advancer", None) is not None
+    pending = getattr(clock, "pending_deadlines", None) if auto else None
     while True:
         if event.is_set():
             return True
-        if clock.now() >= v_deadline or time.monotonic() >= r_deadline:
+        v_now = clock.now()
+        if v_now >= v_deadline or time.monotonic() >= r_deadline:
             return event.is_set()
+        if pending is not None:
+            if v_now == last_v and pending() == 0 and not (in_flight and in_flight()):
+                idle_polls += 1
+            else:
+                idle_polls = 0
+            last_v = v_now
+            if idle_polls >= 5:  # ~100ms real grace: in-flight threads have
+                # reached their sleep() by now, or there are none
+                clock.wait_event(event, max(0.0, v_deadline - v_now))
+                return event.is_set()
         event.wait(0.02)
 
 

@@ -19,7 +19,6 @@ time without distorting a single metric formula.
 from __future__ import annotations
 
 import threading
-from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Iterable, Optional
 

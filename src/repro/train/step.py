@@ -6,16 +6,13 @@ what the multi-pod dry-run lowers.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models.model import Model
-from repro.models.spec import ParamSpec, is_spec_leaf, tree_sds
+from repro.models.spec import is_spec_leaf, tree_sds
 from repro.optim import adamw
 from repro.parallel.sharding import (
     Strategy,
@@ -159,7 +156,11 @@ def make_compressed_train_step(
             shard_body,
             mesh=mesh,
             in_specs=(jax.tree.map(lambda _: rep, params), batch_specs, jax.tree.map(lambda _: rep, comp_state)),
-            out_specs=(jax.tree.map(lambda _: rep, params), jax.tree.map(lambda _: rep, comp_state), jax.tree.map(lambda _: rep, metrics_struct(model))),
+            out_specs=(
+                jax.tree.map(lambda _: rep, params),
+                jax.tree.map(lambda _: rep, comp_state),
+                jax.tree.map(lambda _: rep, metrics_struct(model)),
+            ),
         )(params, batch, comp_state)
         params, opt_state, opt_metrics = adamw.apply_updates(
             opt_cfg, params, grads, opt_state

@@ -1,0 +1,497 @@
+"""Elastic autoscaler: latency models, pool bookkeeping, the pressure ->
+hysteresis -> acquire/drain control loop, dynamic group membership, and the
+chaos case (member dies during scale-in drain => zero failed tasks).
+
+Everything timed runs under a VirtualClock: acquisition latencies of tens of
+virtual seconds (cloud) to minutes (HPC) cost real milliseconds, and the
+seeded ProviderPool RNG makes every latency draw reproducible.
+"""
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import Hydra, ProviderSpec, Task
+from repro.core.autoscaler import (
+    LatencyModel,
+    LaunchSpec,
+    ProviderPool,
+    cloud_startup,
+    hpc_queue_wait,
+)
+from repro.core.provider import ValidationError
+from repro.core.task import TaskState
+from repro.runtime.clock import virtual_time
+
+
+def wait_until(pred, timeout=15.0, poll=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(poll)
+    return pred()
+
+
+def cloud_template(name="pool", concurrency=4, **kw):
+    return ProviderSpec(name=name, platform="cloud", connector="caas", concurrency=concurrency, **kw)
+
+
+def assert_zero_failures(tasks):
+    for t in tasks:
+        assert t.tstate == TaskState.DONE, f"{t.uid}: {t.tstate}"
+        assert t.exception() is None
+
+
+# ---------------------------------------------------------------------------
+# Latency models + pool bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_latency_models_deterministic_and_platform_ordered():
+    a, b = random.Random(42), random.Random(42)
+    model = cloud_startup()
+    assert [model.sample(a) for _ in range(10)] == [model.sample(b) for _ in range(10)]
+    # cloud startup is seconds, HPC queue wait is minutes
+    assert cloud_startup().expected_s < hpc_queue_wait().expected_s
+    # lognormal sample mean tracks the configured mean (loose bound)
+    rng = random.Random(0)
+    mean = sum(cloud_startup(mean_s=45.0).sample(rng) for _ in range(500)) / 500
+    assert 35.0 < mean < 55.0
+
+
+def test_latency_model_fixed_and_uniform():
+    rng = random.Random(1)
+    assert LatencyModel(distribution="fixed", mean_s=7.5).sample(rng) == 7.5
+    u = LatencyModel(distribution="uniform", lo_s=2.0, hi_s=4.0)
+    for _ in range(20):
+        assert 2.0 <= u.sample(rng) <= 4.0
+    with pytest.raises(ValidationError):
+        LatencyModel(distribution="bogus").sample(rng)
+
+
+def test_launch_spec_validation():
+    with pytest.raises(ValidationError):
+        LaunchSpec(template=cloud_template(), min_instances=3, max_instances=1)
+    with pytest.raises(ValidationError):
+        ProviderPool([])
+    with pytest.raises(ValidationError):
+        ProviderPool([LaunchSpec(template=cloud_template("x")), LaunchSpec(template=cloud_template("x"))])
+    # platform default latency models are attached automatically
+    assert LaunchSpec(template=cloud_template()).latency.mean_s == cloud_startup().mean_s
+
+
+def test_pool_instance_names_never_recycled():
+    pool = ProviderPool([LaunchSpec(template=cloud_template("jet2"), max_instances=8)])
+    launch = pool.specs[0]
+    s1 = pool.request_instance(launch)
+    s2 = pool.request_instance(launch)
+    assert (s1.name, s2.name) == ("jet2-1", "jet2-2")
+    pool.note_gone(launch, s1.name)
+    assert pool.request_instance(launch).name == "jet2-3"
+
+
+def test_pool_candidates_fastest_first():
+    fast = LaunchSpec(template=cloud_template("cloudy"), latency=cloud_startup(mean_s=30))
+    slow = LaunchSpec(
+        template=ProviderSpec(name="hpc", platform="hpc", connector="pilot"),
+        latency=hpc_queue_wait(mean_s=600),
+    )
+    pool = ProviderPool([slow, fast])
+    assert [s.template.name for s in pool.candidates()] == ["cloudy", "hpc"]
+
+
+# ---------------------------------------------------------------------------
+# Acquisition state on the broker
+# ---------------------------------------------------------------------------
+
+
+def test_pending_acquisition_visible_in_scale_stats():
+    h = Hydra(pod_store="memory")
+    try:
+        h.register_provider(cloud_template("seed", concurrency=2))
+        spec = cloud_template("elastic-1", concurrency=4)
+        h.begin_acquisition(spec, eta_s=30.0)
+        stats = h.scale_stats()
+        assert stats["incoming_slots"] == 4
+        assert [p["name"] for p in stats["pending_acquisitions"]] == ["elastic-1"]
+        assert h.abort_acquisition("elastic-1") is True
+        assert h.incoming_slots() == 0
+        # completing an aborted acquisition must NOT register a zombie
+        assert h.complete_acquisition(spec) is None
+        assert h.providers() == ["seed"]
+    finally:
+        h.shutdown(wait=False)
+
+
+def test_complete_acquisition_joins_live_group():
+    h = Hydra(pod_store="memory")
+    try:
+        h.register_group("g", [cloud_template("m1", concurrency=2)])
+        spec = cloud_template("m2", concurrency=4)
+        h.begin_acquisition(spec, eta_s=5.0, group="g")
+        handle = h.complete_acquisition(spec)
+        group = h.group("g")
+        assert handle is not None and handle.group == "g"
+        assert set(group.member_names) == {"m1", "m2"}
+        # the joined member is reachable through group metrics and enlarges
+        # the synthetic capacity only element-wise upward
+        assert any(r["member"] == "m2" for r in h.group_rows())
+        # and it is NOT a direct bind target (grouped members never are)
+        assert all(t.name != "m2" for t in h.proxy.bind_targets())
+    finally:
+        h.shutdown(wait=False)
+
+
+def test_remove_provider_deregister_frees_name_and_policy_state():
+    h = Hydra(pod_store="memory", policy="adaptive")
+    try:
+        h.register_provider(cloud_template("seed", concurrency=2))
+        h.register_provider(cloud_template("tmp", concurrency=2))
+        h.policy.observe("tmp", 3.0)
+        h.remove_provider("tmp", drain=True, deregister=True)
+        assert "tmp" not in h.policy.ewma and "tmp" not in h.policy.outstanding
+        h.register_provider(cloud_template("tmp", concurrency=2))  # name recycles
+    finally:
+        h.shutdown(wait=False)
+
+
+# ---------------------------------------------------------------------------
+# The control loop
+# ---------------------------------------------------------------------------
+
+
+def elastic_broker(min_instances=0, max_instances=4, seed_concurrency=2, **scaler_kw):
+    h = Hydra(streaming=True, pod_store="memory", batch_window=0.002, max_batch=64)
+    h.register_provider(cloud_template("seed", concurrency=seed_concurrency))
+    pool = ProviderPool(
+        [
+            LaunchSpec(
+                template=cloud_template("jet2", concurrency=4),
+                min_instances=min_instances,
+                max_instances=max_instances,
+                latency=cloud_startup(mean_s=20.0),
+            )
+        ],
+        seed=7,
+    )
+    kw = dict(tick_s=1.0, warmup_ticks=2, cooldown_ticks=3)
+    kw.update(scaler_kw)
+    scaler = h.autoscale(pool, **kw)
+    return h, scaler
+
+
+def test_scale_out_under_sustained_pressure_then_drain():
+    with virtual_time():
+        h, scaler = elastic_broker(max_instances=4)
+        tasks = [Task(kind="sleep", duration=4.0) for _ in range(48)]
+        h.dispatch(tasks)
+        assert wait_until(lambda: all(t.done() for t in tasks), timeout=20.0)
+        assert_zero_failures(tasks)
+        # sustained pressure demanded extra capacity and it arrived
+        assert scaler.arrivals >= 2
+        assert wait_until(lambda: scaler.pressure() <= 0.05, timeout=10.0)  # drained
+        # the elastic instances actually executed work (not just the seed)
+        elastic = {t.provider for t in tasks if t.provider and t.provider != "seed"}
+        assert elastic
+        h.shutdown(wait=True)
+
+
+def test_no_scale_out_on_brief_pressure_blip():
+    with virtual_time():
+        h, scaler = elastic_broker(warmup_ticks=30)
+        tasks = [Task(kind="sleep", duration=1.0) for _ in range(6)]
+        h.dispatch(tasks)
+        assert wait_until(lambda: all(t.done() for t in tasks), timeout=15.0)
+        assert_zero_failures(tasks)
+        # hysteresis: pressure subsided before the warmup elapsed
+        assert scaler.acquisitions == 0
+        h.shutdown(wait=True)
+
+
+def test_max_bound_respected_under_heavy_pressure():
+    with virtual_time():
+        h, scaler = elastic_broker(max_instances=2, max_concurrent_acquisitions=8)
+        tasks = [Task(kind="sleep", duration=3.0) for _ in range(96)]
+        h.dispatch(tasks)
+        assert wait_until(lambda: all(t.done() for t in tasks), timeout=25.0)
+        assert_zero_failures(tasks)
+        assert scaler.acquisitions <= 2
+        assert len(h.providers()) <= 3  # seed + at most max_instances
+        h.shutdown(wait=True)
+
+
+def test_min_bound_prewarmed_and_never_released():
+    with virtual_time():
+        h, scaler = elastic_broker(min_instances=2, max_instances=4)
+        # min instances are requested at start, before any pressure exists
+        assert scaler.acquisitions >= 2
+        assert wait_until(lambda: scaler.arrivals >= 2, timeout=15.0)
+        # a long idle stretch may release down TO the min, never below
+        assert wait_until(lambda: scaler.ticks >= 30, timeout=15.0)
+        counts = scaler.pool.counts()["jet2"]
+        assert counts["live"] + counts["pending"] >= 2
+        assert len(h.providers()) >= 3
+        h.shutdown(wait=True)
+
+
+def test_scale_in_drains_and_deregisters_after_idle():
+    with virtual_time():
+        h, scaler = elastic_broker(max_instances=3, cooldown_ticks=2)
+        tasks = [Task(kind="sleep", duration=4.0) for _ in range(48)]
+        h.dispatch(tasks)
+        assert wait_until(lambda: all(t.done() for t in tasks), timeout=20.0)
+        assert wait_until(lambda: scaler.releases >= 1, timeout=15.0)
+        assert_zero_failures(tasks)
+        # released instances are deregistered: the proxy no longer knows them
+        gone = [
+            n for n in scaler.ledger
+            if scaler.ledger[n]["released_at"] is not None
+        ]
+        assert gone
+        for name in gone:
+            with pytest.raises(KeyError):
+                h.proxy.get(name)
+        h.shutdown(wait=True)
+
+
+def test_scale_in_aborts_pending_acquisition_first():
+    with virtual_time():
+        # enormous acquisition latency: instances never arrive, so once the
+        # small workload finishes on the seed, scale-in must WITHDRAW the
+        # pending acquisitions instead of draining live ones
+        h = Hydra(streaming=True, pod_store="memory")
+        h.register_provider(cloud_template("seed", concurrency=2))
+        pool = ProviderPool(
+            [
+                LaunchSpec(
+                    template=cloud_template("slow", concurrency=4),
+                    latency=LatencyModel(distribution="fixed", mean_s=10_000.0),
+                )
+            ],
+            seed=3,
+        )
+        scaler = h.autoscale(pool, tick_s=1.0, warmup_ticks=2, cooldown_ticks=2)
+        tasks = [Task(kind="sleep", duration=6.0) for _ in range(40)]
+        h.dispatch(tasks)
+        assert wait_until(lambda: all(t.done() for t in tasks), timeout=20.0)
+        assert_zero_failures(tasks)
+        assert wait_until(lambda: scaler.aborts >= 1, timeout=15.0)
+        assert scaler.releases == 0  # nothing live was ever drained
+        assert wait_until(lambda: h.incoming_slots() == 0, timeout=15.0)
+        h.shutdown(wait=True)
+
+
+def test_chaos_member_dies_during_scale_in_drain():
+    """The chaos case: while an elastic instance is draining out (scale-in),
+    another provider dies hard.  Both orphan sets must re-bind onto the
+    survivors with ZERO failed tasks."""
+    with virtual_time():
+        h = Hydra(streaming=True, pod_store="memory", batch_window=0.002)
+        h.register_provider(cloud_template("seed", concurrency=4))
+        pool = ProviderPool(
+            [
+                LaunchSpec(
+                    template=cloud_template("jet2", concurrency=4),
+                    max_instances=2,
+                    latency=LatencyModel(distribution="fixed", mean_s=5.0),
+                )
+            ],
+            seed=11,
+        )
+        # warmup_ticks huge: the test drives acquisition/release by hand so
+        # the control loop cannot race the choreography
+        scaler = h.autoscale(pool, tick_s=1.0, warmup_ticks=10_000, cooldown_ticks=10_000)
+        launch = pool.specs[0]
+        n1 = scaler._acquire(launch)
+        n2 = scaler._acquire(launch)
+        assert wait_until(lambda: scaler.arrivals == 2, timeout=15.0)
+        tasks = [Task(kind="sleep", duration=8.0, max_retries=4) for _ in range(36)]
+        h.dispatch(tasks)
+        assert wait_until(
+            lambda: any(t.tstate == TaskState.RUNNING for t in tasks), timeout=15.0
+        )
+        # scale-in drain of one elastic member while ANOTHER provider dies
+        release = threading.Thread(target=scaler._release, args=(launch, n2))
+        release.start()
+        h.manager("seed").fail()
+        release.join(timeout=15.0)
+        assert not release.is_alive()
+        assert wait_until(lambda: all(t.done() for t in tasks), timeout=25.0)
+        assert_zero_failures(tasks)  # zero failed tasks, the acceptance bar
+        assert n1 in h.providers() and n2 not in h.providers()
+        h.shutdown(wait=True)
+
+
+def test_dispatcher_defers_unplaceable_task_while_capacity_incoming():
+    with virtual_time():
+        from repro.core.task import Resources
+
+        h = Hydra(streaming=True, pod_store="memory")
+        h.register_provider(cloud_template("small", concurrency=2))  # 16 cpus
+        big_spec = ProviderSpec(
+            name="big-1",
+            platform="cloud",
+            connector="caas",
+            node_capacity=Resources(cpus=64, accels=0, memory_mb=1 << 20),
+            concurrency=4,
+        )
+        h.begin_acquisition(big_spec, eta_s=30.0)
+        big_task = Task(kind="noop", resources=Resources(cpus=48, memory_mb=1 << 17))
+        h.dispatch([big_task])
+        # unplaceable NOW, but capacity is incoming: must stay queued
+        time.sleep(0.4)
+        assert not big_task.done()
+        assert big_task.tstate != TaskState.CANCELED
+        h.complete_acquisition(big_spec)
+        assert wait_until(lambda: big_task.done(), timeout=15.0)
+        assert big_task.exception() is None
+        assert big_task.provider == "big-1"
+        h.shutdown(wait=True)
+
+
+def test_unplaceable_task_still_fails_without_incoming_capacity():
+    with virtual_time():
+        from repro.core.task import Resources
+
+        h = Hydra(streaming=True, pod_store="memory")
+        h.register_provider(cloud_template("small", concurrency=2))
+        big_task = Task(kind="noop", resources=Resources(cpus=4096))
+        h.dispatch([big_task])
+        assert wait_until(lambda: big_task.done(), timeout=15.0)
+        assert big_task.exception() is not None
+        h.shutdown(wait=True)
+
+
+def test_failed_group_join_rolls_back_registration():
+    # cloud spec arriving into an hpc group: add_member raises AFTER
+    # register_provider succeeded — the registration must be fully undone,
+    # not leaked into the direct-binding pool as a zombie
+    h = Hydra(pod_store="memory")
+    try:
+        h.register_group(
+            "hpcpool",
+            [ProviderSpec(name="b2", platform="hpc", connector="pilot", concurrency=2)],
+        )
+        spec = cloud_template("zombie-1", concurrency=4)
+        h.begin_acquisition(spec, eta_s=1.0, group="hpcpool")
+        with pytest.raises(ValidationError):
+            h.complete_acquisition(spec)
+        with pytest.raises(KeyError):
+            h.proxy.get("zombie-1")
+        assert all(t.name != "zombie-1" for t in h.proxy.bind_targets())
+    finally:
+        h.shutdown(wait=False)
+
+
+def test_autoscale_rejects_misconfigured_group_target():
+    h = Hydra(streaming=True, pod_store="memory")
+    try:
+        h.register_group(
+            "hpcpool",
+            [ProviderSpec(name="b2", platform="hpc", connector="pilot", concurrency=2)],
+        )
+        pool = ProviderPool(
+            [LaunchSpec(template=cloud_template("jet"), group="hpcpool")]
+        )
+        with pytest.raises(ValidationError):
+            h.autoscale(pool)
+        assert h.autoscaler is None or not h.autoscaler.arrivals
+    finally:
+        h.autoscaler = None  # failed attach leaves nothing running
+        h.shutdown(wait=False)
+
+
+def test_pool_quarantines_spec_after_consecutive_failures():
+    pool = ProviderPool([LaunchSpec(template=cloud_template("bad"), min_instances=1)])
+    launch = pool.specs[0]
+    for _ in range(ProviderPool.MAX_CONSECUTIVE_FAILURES):
+        spec = pool.request_instance(launch)
+        pool.note_failed(launch, spec.name)
+    # a spec that keeps failing leaves both the min-fill and candidate sets:
+    # one broken template cannot buy providers in an unbounded loop
+    assert pool.below_min() == []
+    assert pool.candidates() == []
+    # a successful arrival resets the quarantine counter
+    spec = pool.request_instance(launch)
+    pool.note_live(launch, spec.name)
+    assert pool.candidates() == [launch]
+
+
+def test_lost_instance_frees_pool_headroom_for_replacement():
+    with virtual_time():
+        h = Hydra(streaming=True, pod_store="memory")
+        h.register_provider(cloud_template("seed", concurrency=2))
+        pool = ProviderPool(
+            [
+                LaunchSpec(
+                    template=cloud_template("jet2", concurrency=4),
+                    max_instances=1,
+                    latency=LatencyModel(distribution="fixed", mean_s=2.0),
+                )
+            ]
+        )
+        scaler = h.autoscale(pool, tick_s=1.0, warmup_ticks=10_000, cooldown_ticks=10_000)
+        launch = pool.specs[0]
+        name = scaler._acquire(launch)
+        assert wait_until(lambda: scaler.arrivals == 1, timeout=15.0)
+        assert pool.counts()["jet2"]["live"] == 1
+        assert pool.candidates() == []  # at max
+        # hard outage: the broker blacklists the instance
+        h._handle_provider_down(name)
+        assert pool.counts()["jet2"]["live"] == 0
+        assert pool.candidates() == [launch]  # headroom freed: replaceable
+        assert scaler.ledger[name]["released_at"] is not None
+        h.shutdown(wait=True)
+
+
+def test_releasable_never_counts_pending_toward_min():
+    pool = ProviderPool(
+        [LaunchSpec(template=cloud_template("jet2"), min_instances=1, max_instances=4)]
+    )
+    launch = pool.specs[0]
+    live = pool.request_instance(launch)
+    pool.note_live(launch, live.name)
+    pool.request_instance(launch)  # stays pending
+    # live(1) + pending(1) > min(1), but draining the only LIVE instance
+    # would break the standing-capacity promise while the pending one can
+    # still fail or be withdrawn
+    assert pool.releasable() is None
+
+
+def test_unplaceable_task_fails_fast_when_incoming_cannot_fit_it():
+    with virtual_time():
+        from repro.core.task import Resources
+
+        h = Hydra(streaming=True, pod_store="memory")
+        h.register_provider(cloud_template("small", concurrency=2))
+        # incoming capacity exists, but is far too small for the task:
+        # deferring would stall the error until every acquisition landed
+        h.begin_acquisition(cloud_template("tiny-1", concurrency=2), eta_s=1000.0)
+        big_task = Task(kind="noop", resources=Resources(cpus=4096))
+        h.dispatch([big_task])
+        assert wait_until(lambda: big_task.done(), timeout=15.0)
+        assert big_task.exception() is not None
+        h.shutdown(wait=True)
+
+
+def test_autoscaler_stop_withdraws_inflight_acquisitions():
+    with virtual_time():
+        h = Hydra(streaming=True, pod_store="memory")
+        h.register_provider(cloud_template("seed", concurrency=2))
+        pool = ProviderPool(
+            [
+                LaunchSpec(
+                    template=cloud_template("never", concurrency=4),
+                    latency=LatencyModel(distribution="fixed", mean_s=100_000.0),
+                )
+            ]
+        )
+        scaler = h.autoscale(pool, tick_s=1.0, warmup_ticks=1)
+        h.dispatch([Task(kind="sleep", duration=5.0) for _ in range(32)])
+        assert wait_until(lambda: scaler.acquisitions >= 1, timeout=15.0)
+        scaler.stop(wait=True)
+        assert h.incoming_slots() == 0  # no orphaned pending records
+        assert pool.counts()["never"]["pending"] == 0
+        h.shutdown(wait=True)

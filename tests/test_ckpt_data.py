@@ -1,6 +1,5 @@
 """Checkpointing (sync/async, retention, restart) + data pipeline."""
 import os
-import time
 
 import jax
 from repro.compat import compat_make_mesh

@@ -1,4 +1,5 @@
-"""Clock layer: wall/virtual semantics, registry scoping, trace integration."""
+"""Clock layer: wall/virtual semantics, registry scoping, trace integration,
+delayed callbacks (call_later), and the guard_wait idle valve."""
 import threading
 import time
 
@@ -7,6 +8,7 @@ from repro.runtime.clock import (
     VirtualClock,
     WallClock,
     get_clock,
+    guard_wait,
     use_clock,
     virtual_time,
 )
@@ -109,6 +111,101 @@ def test_tracing_now_follows_active_clock():
         tr.add("evt")
         assert tr.events[0][1] == 42.0
     assert tracing.now() > 0  # back on wall time
+
+
+def test_call_later_wall_clock_fires():
+    c = WallClock()
+    fired = threading.Event()
+    c.call_later(0.01, fired.set)
+    assert fired.wait(timeout=5.0)
+
+
+def test_call_later_virtual_manual_advance():
+    c = VirtualClock(auto_advance=False)
+    fired = []
+    c.call_later(10.0, lambda: fired.append(c.now()))
+    c.advance(9.999)
+    assert fired == []
+    c.advance(0.001)
+    assert fired == [10.0]  # fires at the exact virtual deadline
+    c.close()
+
+
+def test_call_later_counts_as_pending_deadline_and_auto_advances():
+    with virtual_time() as c:
+        fired = threading.Event()
+        c.call_later(60.0, fired.set)
+        assert c.pending_deadlines() == 1
+        # the auto-advancer must jump to the timer deadline on its own
+        assert fired.wait(timeout=5.0)
+        assert c.now() >= 60.0
+
+
+def test_call_later_cancel_prevents_firing():
+    c = VirtualClock(auto_advance=False)
+    fired = []
+    call = c.call_later(5.0, lambda: fired.append(1))
+    assert call.cancel() is True
+    c.advance(10.0)
+    assert fired == []
+    assert call.cancel() is False  # second cancel reports already-dead
+    c.close()
+
+
+def test_call_later_zero_delay_fires_immediately():
+    c = VirtualClock(auto_advance=False)
+    fired = []
+    c.call_later(0.0, lambda: fired.append(c.now()))
+    assert fired == [0.0]
+    c.close()
+
+
+def test_guard_wait_idle_virtual_clock_elapses_at_virtual_deadline():
+    # Regression (Submission.wait bug): with NO tasks in flight — no
+    # sleepers, no timers, frozen virtual time — a guard_wait(timeout=60)
+    # used to block for 60 *real* seconds.  The idle valve must register the
+    # deadline and let the auto-advancer jump to it within a grace window.
+    with virtual_time() as c:
+        ev = threading.Event()
+        t0 = time.monotonic()
+        assert guard_wait(ev, timeout=60.0) is False
+        assert time.monotonic() - t0 < 5.0  # did not burn the real budget
+        assert c.now() >= 60.0  # elapsed on the VIRTUAL clock
+
+
+def test_guard_wait_event_still_wins_under_virtual_clock():
+    with virtual_time():
+        ev = threading.Event()
+        threading.Timer(0.05, ev.set).start()
+        assert guard_wait(ev, timeout=300.0) is True
+
+
+def test_guard_wait_in_flight_keeps_idle_valve_closed():
+    # Pure-CPU work never touches the clock, so the clock LOOKS idle; an
+    # in_flight=True caller must keep the valve closed (real-time bound
+    # applies) instead of jumping the virtual clock to the timeout and
+    # reporting a phantom timeout while real work still runs.
+    with virtual_time() as c:
+        ev = threading.Event()
+        threading.Timer(0.6, ev.set).start()  # "real work" finishing late
+        t0 = time.monotonic()
+        assert guard_wait(ev, timeout=1000.0, in_flight=lambda: True) is True
+        assert time.monotonic() - t0 >= 0.5  # waited for the real work
+        assert c.now() < 1000.0  # virtual clock was NOT jumped to the guard
+
+
+def test_submission_wait_idle_virtual_clock_returns_at_virtual_deadline():
+    # The user-facing shape of the same bug: a submission whose tasks can
+    # never resolve (no providers ever dispatch them) must not turn
+    # wait(timeout=virtual_seconds) into a real-time hang.
+    from repro.core.broker import Submission
+    from repro.core.task import Task
+
+    with virtual_time():
+        sub = Submission([Task(kind="noop")], broker=None)
+        t0 = time.monotonic()
+        assert sub.wait(timeout=45.0) is False
+        assert time.monotonic() - t0 < 5.0
 
 
 def test_trace_timestamps_monotonic_under_virtual_time():

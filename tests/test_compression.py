@@ -5,7 +5,6 @@ import sys
 import textwrap
 
 import numpy as np
-import pytest
 
 import jax
 from repro.compat import compat_make_mesh

@@ -1,6 +1,5 @@
 """FACTS science sanity + workflow integration through the broker."""
 import numpy as np
-import pytest
 
 from repro.facts import model as facts
 

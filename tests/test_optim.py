@@ -1,7 +1,6 @@
 """Optimizer: AdamW convergence, schedule shape, ZeRO-1 pspec derivation."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.optim import adamw

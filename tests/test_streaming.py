@@ -1,6 +1,5 @@
 """Streaming dispatcher: micro-batching, late binding, backfill, cycle
 detection, and the 10k-task virtual-clock scheduling scenario."""
-import threading
 
 import pytest
 

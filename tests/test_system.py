@@ -2,7 +2,6 @@
 heterogeneous workload, concurrent cloud+HPC providers, pods, metrics,
 fault tolerance, and a compute (JAX train) task brokered like a container.
 """
-import time
 
 import numpy as np
 import pytest
