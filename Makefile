@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic
+.PHONY: test test-fast lint cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging
 
 test:  ## tier-1 verify (ROADMAP.md)
 	$(PY) -m pytest -x -q
@@ -36,3 +36,6 @@ bench-streaming:  ## exp6 only: streaming vs frontier DAG dispatch (800 instance
 
 bench-elastic:  ## exp7 only: elastic weak scaling + over-provisioning cost curve
 	$(PY) -m benchmarks.exp7_elastic --full
+
+bench-staging:  ## exp8 only: data-aware staging, locality-aware vs blind placement
+	$(PY) -m benchmarks.exp8_staging --full

@@ -1,0 +1,154 @@
+"""Experiment 8: data-aware staging — locality-aware vs locality-blind
+placement under shared inputs at 4 sites.
+
+The staging subsystem (core/staging.py) makes cross-platform data movement a
+modeled, chargeable cost: datasets have sizes and replicas, links have
+per-platform-pair bandwidth/latency, and the streaming dispatcher stages a
+task's inputs to its placement site before dispatch.  This experiment
+measures what placement does with that model:
+
+  blind  - round_robin: ignores where bytes live; every stage of a chain
+           lands wherever the rotation points, so inter-stage artifacts and
+           the shared input shards are re-pulled across sites all run long.
+  aware  - data_gravity: charges cold reads their modeled transfer time, so
+           chains stay where their bytes already are and each shared shard
+           is pulled to (approximately) one site once.
+
+Workload: W chain workflows (3 sleep stages each) over S shared input
+shards (1 GB each, pinned in the shared store).  Stage outputs are declared
+dataset footprints (512/512/64 MB), so movement is entirely
+placement-driven.  Runs on a VirtualClock: transfers and compute are
+modeled seconds, the whole sweep takes real milliseconds, and byte counts
+are exact.
+
+Measured per arm: mb_moved, cache_hits/cold_reads, transfer_wait_s,
+virtual makespan.  Acceptance (ISSUE 4): aware moves >= 30% fewer MB than
+blind at 4 sites with non-trivially shared inputs.
+"""
+from __future__ import annotations
+
+from repro.core import Hydra, Task, Workflow, WorkflowManager
+from repro.runtime.clock import virtual_time
+
+from benchmarks.common import print_rows, write_csv
+from repro.core.provider import ProviderSpec
+
+N_SITES = 4
+SHARD_MB = 1024.0
+STAGE_OUT_MB = (512.0, 512.0, 64.0)
+STAGE_SLEEP_S = 2.0
+
+
+def _providers() -> list[ProviderSpec]:
+    """Three clouds + one HPC system: the paper's 4-site heterogeneous
+    topology, with the cloud<->HPC link as the narrow waist."""
+    return [
+        ProviderSpec(name="jet2", platform="cloud", concurrency=4),
+        ProviderSpec(name="chi", platform="cloud", concurrency=4),
+        ProviderSpec(name="aws", platform="cloud", concurrency=4),
+        ProviderSpec(name="bridges2", platform="hpc", connector="pilot", concurrency=4),
+    ]
+
+
+def _workflows(n_instances: int, n_shards: int) -> list[Workflow]:
+    wfs = []
+    for i in range(n_instances):
+        shard = f"exp8/shard-{i % n_shards}"
+        base = f"exp8/w{i:04d}"
+        wf = Workflow(name=f"stage8.{i:04d}")
+        t1 = wf.add(
+            Task(
+                kind="sleep",
+                duration=STAGE_SLEEP_S,
+                inputs=[shard],
+                outputs={f"{base}/a": STAGE_OUT_MB[0]},
+            )
+        )
+        t2 = wf.add(
+            Task(
+                kind="sleep",
+                duration=STAGE_SLEEP_S,
+                inputs=[f"{base}/a"],
+                outputs={f"{base}/b": STAGE_OUT_MB[1]},
+            ),
+            deps=[t1],
+        )
+        wf.add(
+            Task(
+                kind="sleep",
+                duration=STAGE_SLEEP_S,
+                inputs=[f"{base}/b", shard],
+                outputs={f"{base}/c": STAGE_OUT_MB[2]},
+            ),
+            deps=[t2],
+        )
+        wfs.append(wf)
+    return wfs
+
+
+def _run_arm(policy: str, n_instances: int, n_shards: int, seed: int = 0) -> dict:
+    with virtual_time() as clock:
+        h = Hydra(
+            pod_store="memory",
+            policy=policy,
+            streaming=True,
+            batch_window=0.001,
+            tasks_per_pod=16,
+            staging_seed=seed,
+        )
+        for spec in _providers():
+            h.register_provider(spec)
+        for k in range(n_shards):
+            h.staging.registry.add(
+                f"exp8/shard-{k}", SHARD_MB, sites=["shared"], pinned=True
+            )
+        wfs = _workflows(n_instances, n_shards)
+        t0 = clock.now()
+        WorkflowManager(h).run(wfs, timeout=3600)
+        makespan = clock.now() - t0
+        stats = h.staging_stats()
+        row = {
+            "mode": "aware" if policy == "data_gravity" else "blind",
+            "policy": policy,
+            "n_instances": n_instances,
+            "n_shards": n_shards,
+            "n_sites": N_SITES,
+            "all_done": all(w.done and not w.failed for w in wfs),
+            "mb_moved": stats["mb_moved"],
+            "transfers": stats["transfers"],
+            "cache_hits": stats["cache_hits"],
+            "cold_reads": stats["cold_reads"],
+            "transfer_wait_s": stats["transfer_wait_s"],
+            "makespan_s": round(makespan, 3),
+        }
+        h.shutdown(wait=True)
+    return row
+
+
+def run(n_instances: int, n_shards: int = 4, verbose: bool = True) -> list[dict]:
+    blind = _run_arm("round_robin", n_instances, n_shards)
+    aware = _run_arm("data_gravity", n_instances, n_shards)
+    reduction = 1.0 - aware["mb_moved"] / max(blind["mb_moved"], 1e-9)
+    speedup = blind["makespan_s"] / max(aware["makespan_s"], 1e-9)
+    for row in (blind, aware):
+        row["bytes_reduction"] = round(reduction, 4)
+        row["makespan_speedup"] = round(speedup, 4)
+    rows = [blind, aware]
+    write_csv("exp8_staging", rows)
+    if verbose:
+        print_rows(rows)
+    return rows
+
+
+def main(full: bool = False, smoke: bool = False):
+    if smoke:
+        return run(n_instances=12, n_shards=3)
+    if full:
+        return run(n_instances=160)
+    return run(n_instances=48)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(full="--full" in sys.argv, smoke="--smoke" in sys.argv)

@@ -34,6 +34,15 @@ def _exp6_summary(rows: list[dict]) -> str:
     )
 
 
+def _exp8_summary(rows: list[dict]) -> str:
+    aware = next(r for r in rows if r["mode"] == "aware")
+    return (
+        f"exp8_staging,{aware['mb_moved']},"
+        f"bytes_reduction={aware['bytes_reduction']:.3f}"
+        f"_makespan_speedup={aware['makespan_speedup']:.3f}"
+    )
+
+
 def _exp7_summary(rows: list[dict]) -> str:
     weak = [r for r in rows if r["mode"] == "weak"]
     elastic = [r for r in rows if r["mode"] == "elastic"]
@@ -66,7 +75,13 @@ def run_smoke() -> list[str]:
     tiny counts, and the elastic run entirely on a virtual clock."""
     out = []
 
-    from benchmarks import exp1_per_provider, exp4_facts, exp6_streaming, exp7_elastic
+    from benchmarks import (
+        exp1_per_provider,
+        exp4_facts,
+        exp6_streaming,
+        exp7_elastic,
+        exp8_staging,
+    )
 
     print("== Exp 1 (smoke): per-provider scaling ==")
     out.append(_summary("exp1_per_provider", exp1_per_provider.main(False)))
@@ -85,6 +100,9 @@ def run_smoke() -> list[str]:
     print("== Exp 7 (smoke): elastic acquisition ==")
     out.append(_exp7_summary(exp7_elastic.main(smoke=True)))
 
+    print("== Exp 8 (smoke): data-aware staging ==")
+    out.append(_exp8_summary(exp8_staging.main(smoke=True)))
+
     path = _write_bench_json("smoke", out)
     print(f"\nwrote {path}")
     return out
@@ -95,7 +113,7 @@ def run_all(full: bool) -> list[str]:
 
     from benchmarks import exp1_per_provider, exp2_cross_provider, exp3a_cross_platform
     from benchmarks import exp3b_heterogeneous, exp4_facts, exp5_groups, exp6_streaming
-    from benchmarks import exp7_elastic, kernels_bench, roofline_report
+    from benchmarks import exp7_elastic, exp8_staging, kernels_bench, roofline_report
 
     print("== Exp 1: per-provider scaling (OVH/TH/TPT, MCPP vs SCPP) ==")
     r1 = exp1_per_provider.main(full)
@@ -130,6 +148,9 @@ def run_all(full: bool) -> list[str]:
 
     print("== Exp 7: elastic acquisition (weak scaling + cost curve) ==")
     out.append(_exp7_summary(exp7_elastic.main(full)))
+
+    print("== Exp 8: data-aware staging (locality-aware vs blind placement) ==")
+    out.append(_exp8_summary(exp8_staging.main(full)))
 
     print("== Kernel micro-benchmarks ==")
     for name, us, derived in kernels_bench.main(full):

@@ -15,6 +15,13 @@ from repro.core.managers.workflow import Workflow, WorkflowManager
 from repro.core.policy import NoEligibleProvider
 from repro.core.provider import ProviderProxy, ProviderSpec
 from repro.core.resource import ResourceRequest
+from repro.core.staging import (
+    DatasetRegistry,
+    LinkModel,
+    StagingError,
+    StagingService,
+    TransferEngine,
+)
 from repro.core.task import Resources, Task, TaskState
 
 __all__ = [
@@ -37,6 +44,11 @@ __all__ = [
     "WorkflowManager",
     "ProviderProxy",
     "ProviderSpec",
+    "DatasetRegistry",
+    "LinkModel",
+    "StagingError",
+    "StagingService",
+    "TransferEngine",
     "ResourceRequest",
     "Resources",
     "Task",

@@ -384,11 +384,22 @@ class Autoscaler:
                 self.trace.add("tick_error")
 
     # -- the decision tick ------------------------------------------------
+    def _demand(self) -> int:
+        """Runnable demand: ready-queue depth + backlog, minus tasks stalled
+        purely on staging (core/staging.py).  A task waiting on bytes is not
+        a task a new provider could run — the dispatcher parks first-time
+        stage-ins outside the ready heap (so pending() never sees them), and
+        ``stalled_in_backlog()`` subtracts the re-gated retries the backlog
+        scan still counts.  Without this, a data-heavy burst would buy
+        providers that sit idle until the transfers land."""
+        d = self.broker._dispatcher
+        queued = d.pending() if d else 0
+        stalled = d.stalled_in_backlog() if d else 0
+        return queued + max(0, self.broker.backlog() - stalled)
+
     def pressure(self) -> float:
-        queued = self.broker._dispatcher.pending() if self.broker._dispatcher else 0
-        demand = queued + self.broker.backlog()
         supply = self.broker.total_slots() + self.broker.incoming_slots()
-        return demand / max(supply, 1)
+        return self._demand() / max(supply, 1)
 
     def _tick(self) -> None:
         self.ticks += 1
@@ -416,8 +427,7 @@ class Autoscaler:
         by per-spec max and the concurrent-acquisition cap.  candidates()
         re-ranks each round, so the fastest-arriving platform with headroom
         keeps winning until the deficit is covered."""
-        queued = self.broker._dispatcher.pending() if self.broker._dispatcher else 0
-        deficit = queued + self.broker.backlog() - (
+        deficit = self._demand() - (
             self.broker.total_slots() + self.broker.incoming_slots()
         )
         while (
@@ -581,6 +591,11 @@ class Autoscaler:
             "releases": self.releases,
             "aborts": self.aborts,
             "last_pressure": round(self.last_pressure, 3),
+            "staging_stalled": (
+                self.broker._dispatcher.stalled_on_staging()
+                if self.broker._dispatcher
+                else 0
+            ),
             "hot_ticks": self._hot,
             "cold_ticks": self._cold,
             "pool": self.pool.counts(),

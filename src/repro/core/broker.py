@@ -41,6 +41,7 @@ from repro.core.partition import partition
 from repro.core.pod import Pod, make_store
 from repro.core.policy import Policy, make_policy
 from repro.core.provider import ProviderHandle, ProviderProxy, ProviderSpec
+from repro.core.staging import LinkModel, StagingService
 from repro.core.task import Task, TaskState
 from repro.runtime.clock import guard_wait
 from repro.runtime.tracing import Metrics, Trace, compute_metrics, now
@@ -123,6 +124,10 @@ class Hydra:
         streaming: bool = False,
         batch_window: float = 0.002,
         max_batch: int = 256,
+        staging_seed: int = 0,
+        site_capacity_mb: Optional[float] = None,
+        staging_links: Optional[dict[tuple[str, str], LinkModel]] = None,
+        staging_max_per_link: int = 2,
     ):
         self.workdir = workdir or tempfile.mkdtemp(prefix="hydra_")
         os.makedirs(self.workdir, exist_ok=True)
@@ -139,6 +144,17 @@ class Hydra:
         self._max_batch = max_batch
         self._dispatcher: Optional[StreamingDispatcher] = None
         self.data = DataManager(os.path.join(self.workdir, "data"))
+        # data-aware staging (core/staging.py): dataset registry + modeled
+        # transfer engine.  Physical DataManager verbs update the logical
+        # replica map; binding policies read it for data-gravity placement.
+        self.staging = StagingService(
+            seed=staging_seed,
+            default_capacity_mb=site_capacity_mb,
+            links=staging_links,
+            max_per_link=staging_max_per_link,
+        )
+        self.data.attach_registry(self.staging.registry)
+        self.policy.attach_staging(self.staging)
         self._managers: dict[str, object] = {}
         self._lock = threading.RLock()
         self._fault_lock = threading.RLock()  # serializes orphan collection/rebind
@@ -253,6 +269,16 @@ class Hydra:
         with self._lock:
             stats["n_submits"] = self.n_submits
             stats["n_pods"] = self.n_pods_total  # cumulative, prune-proof
+        return stats
+
+    def staging_stats(self) -> dict:
+        """The data-movement story (core/staging.py): bytes moved, replica
+        hits vs cold reads, eviction/re-route counts, transfer wait —
+        benchmarks/exp8_staging.py compares these across placement arms."""
+        stats = self.staging.stats()
+        stats["staging_blocked"] = (
+            self._dispatcher.stalled_on_staging() if self._dispatcher else 0
+        )
         return stats
 
     # ------------------------------------------------------------------
@@ -394,8 +420,10 @@ class Hydra:
                 handle,
                 on_task_done=self._on_task_done,
                 on_task_skipped=self._on_task_skipped,
+                on_task_finishing=self._on_task_finishing,
             )
         self.data.register_site(spec.name)
+        self.staging.register_site(spec.name, platform=spec.platform)
         return handle
 
     def register_group(
@@ -431,6 +459,11 @@ class Hydra:
                 min_healthy=min_healthy,
             )
             self.proxy.register_group(group)
+            # a group is ONE staging site: members share a group-local store
+            # (the way the paper's platforms share a filesystem), so member
+            # churn inside the group never moves bytes
+            self.data.register_site(name)
+            self.staging.register_site(name, platform=group.spec.platform)
             return group
         except Exception:
             # a failed group registration must not leak its on-the-fly
@@ -457,6 +490,16 @@ class Hydra:
             handle.healthy = False
             handle.outstanding = 0
         mgr.fail()  # reject anything in flight
+        if drain:
+            # graceful release: save any LAST-copy dataset to the shared
+            # store before the scratch goes away — a routine scale-in must
+            # never terminally fail downstream tasks over lost data
+            self.staging.evacuate(name)
+        # the site's scratch dies with the instance: drop its replicas,
+        # re-route any transfer that was reading from (or writing to) it,
+        # and close the physical namespace so the verbs can't strand data
+        self.staging.site_down(name)
+        self.data.deregister_site(name)
         if handle.group is not None:
             group = self.proxy.get_group(handle.group)
             group.mark_down(name)  # out of rotation before the orphan sweep
@@ -587,6 +630,8 @@ class Hydra:
         # -- bulk submit (concurrently across providers) -----------------------
         rt.add("submit_start")
         sub.dispatch_started = True
+        for t in tasks:  # now visible to backlog() until the sub is pruned
+            t.in_submission = True
         per_provider: dict[str, list[Pod]] = {}
         for p in pods:
             per_provider.setdefault(p.provider, []).append(p)
@@ -751,6 +796,19 @@ class Hydra:
             else:
                 self._rebind_and_resubmit([task], exclude=provider)
 
+    def _on_task_finishing(self, task: Task, provider: str):
+        """Stage-out, on the manager thread BEFORE the task's future
+        resolves: resolution synchronously enqueues dependents, so a child
+        could reach the staging gate ahead of its input's registration if
+        outputs were registered any later.  Group-bound tasks write the
+        group-local store (the logical site)."""
+        if not (task.outputs or task.inputs):
+            return
+        try:
+            self.staging.task_completed(task, task.group or provider)
+        except Exception:
+            task.trace.add("stage_out_error")  # never break completion
+
     def _on_task_skipped(self, task: Task, provider: str):
         """A manager skipped a task that went final elsewhere (speculation /
         failover race): release the member's load slot."""
@@ -766,6 +824,8 @@ class Hydra:
             if handle.healthy:
                 handle.healthy = False
                 handle.trace.add("blacklisted")
+        self.staging.site_down(name)
+        self.data.deregister_site(name)
         if self.autoscaler is not None:
             # a blacklisted elastic instance must stop occupying pool
             # headroom, or broken capacity could never be replaced
@@ -817,6 +877,19 @@ class Hydra:
     def _rebind_and_resubmit(self, tasks: list[Task], exclude: Optional[str] = None):
         if not tasks:
             return
+        if self._dispatcher is not None:
+            # tasks with declared inputs must re-enter through the staging
+            # gate: a direct resubmit would run them at a site their inputs
+            # were never staged to (the dead site took its replicas down)
+            gated = [t for t in tasks if t.inputs]
+            if gated:
+                for t in gated:
+                    t.trace.add("rebind_via_gate")
+                    self._release_claim(t)
+                self._dispatcher.enqueue(gated)
+                tasks = [t for t in tasks if not t.inputs]
+                if not tasks:
+                    return
         targets = [h for h in self.proxy.bind_targets() if h.name != exclude]
         if not targets:
             for t in tasks:
@@ -875,6 +948,16 @@ class Hydra:
         name = self.policy.bind(shadow, targets)
         shadow.provider = name
         shadow.group = name if self.proxy.is_group(name) else None
+        if shadow.inputs and self._dispatcher is not None:
+            # the clone carries the original's declared inputs, which live at
+            # the straggling site — it must enter through the staging gate so
+            # the bytes are staged (and charged) to the speculation target.
+            # The reservation pins the gate to the exclude-aware choice made
+            # above, or speculation could route right back to the straggler.
+            shadow.reserved_provider = name
+            shadow.trace.add("speculate_via_gate")
+            self._dispatcher.enqueue([shadow])
+            return
         shadow.advance(TaskState.BOUND)
         pods = partition([shadow], name, model="scpp")
         for p in pods:
@@ -903,4 +986,5 @@ class Hydra:
         for m in managers:
             m.shutdown(wait=wait)
         self._dispatch.shutdown(wait=wait)
+        self.staging.shutdown()
         self.store.cleanup()

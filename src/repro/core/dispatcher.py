@@ -33,6 +33,7 @@ import threading
 from typing import TYPE_CHECKING, Optional
 
 from repro.core.policy import NoEligibleProvider
+from repro.core.staging import StagingError
 from repro.core.task import Task, TaskState
 from repro.runtime.clock import get_clock
 from repro.runtime.tracing import Counter, Trace
@@ -66,6 +67,12 @@ class StreamingDispatcher:
         # drain is O(log n) per task instead of a full re-sort per round
         self._pending: list[tuple[int, int, Task]] = []
         self._queued: set[str] = set()  # uids in the heap (dedup guard)
+        # tasks parked on stage-in (core/staging.py): OUT of the ready heap,
+        # so pending()/queue_pressure() never count work that no amount of
+        # new capacity could run — exactly what keeps the autoscaler from
+        # buying providers for tasks that are waiting on bytes, not slots
+        self._blocked: dict[str, Task] = {}
+        self.max_staging_attempts = 3
         self._seq = 0
         self._lock = threading.Lock()
         self._wake = threading.Event()
@@ -142,7 +149,11 @@ class StreamingDispatcher:
                 with self._lock:
                     if not self._pending:  # recheck under the lock
                         self._wake.clear()
-                        self._idle.set()
+                        # drain()'s contract is "nothing left to dispatch":
+                        # a task parked on stage-in is still owed a dispatch,
+                        # so the queue is not idle while any task is blocked
+                        if not self._blocked:
+                            self._idle.set()
                 self._wake.wait(timeout=0.05)
                 continue
             # open the micro-batch window: readiness events from other
@@ -188,14 +199,160 @@ class StreamingDispatcher:
         else:
             budget = min(self.max_batch, max(self.broker.idle_slots(), self.min_batch))
         batch: list[Task] = []
+        stale: list[Task] = []
         with self._lock:
             while self._pending and len(batch) < budget:
                 _, _, t = heapq.heappop(self._pending)
                 self._queued.discard(t.uid)
                 if t.final:  # canceled while queued
+                    stale.append(t)
                     continue
                 batch.append(t)
-        return batch
+        for t in stale:
+            # a canceled task may still hold a staging-gate reservation:
+            # dropping it without unbinding would leak policy load accounting
+            # for the reserved provider forever (released outside the lock —
+            # policy locks nest under the dispatcher's, never the reverse)
+            self._release_reservation(t)
+        return self._stage_gate(batch)
+
+    # -- the staging gate (core/staging.py) ------------------------------
+    def _stage_gate(self, batch: list[Task]) -> list[Task]:
+        """Stage-in insertion point: a task whose declared inputs are missing
+        at its placement site is parked while its transfers fly, and ONLY
+        that task — the rest of the batch dispatches now, so transfers
+        overlap with other tasks' compute.
+
+        Placement is decided HERE, via the binding policy (a stateful
+        reservation the later ``bind_bulk`` honors): staging to a predicted
+        site and then binding elsewhere would ship bytes to the wrong
+        platform.  Replica-resident tasks pay nothing and flow straight
+        through; the data-gravity policy makes that the common case."""
+        staging = getattr(self.broker, "staging", None)
+        if staging is None or not any(t.inputs for t in batch):
+            return batch
+        ready: list[Task] = []
+        targets = None
+        for t in batch:
+            if not t.inputs:
+                ready.append(t)
+                continue
+            if targets is None:
+                targets = self.broker.proxy.bind_targets()
+            name = t.reserved_provider
+            if name is not None and not any(p.name == name for p in targets):
+                # the reserved target died (its replicas with it): release
+                # the reservation and re-bind, instead of letting bind_bulk
+                # silently re-choose a site the inputs never reached
+                self._release_reservation(t)
+                name = None
+            if name is None:
+                if not targets:
+                    ready.append(t)  # full outage: the retry path owns it
+                    continue
+                try:
+                    name = self.broker.policy.bind(t, targets)
+                except NoEligibleProvider:
+                    ready.append(t)  # surfaced by the dispatch error path
+                    continue
+                t.reserved_provider = name
+            # an existing reservation with inputs missing at its site is
+            # staged (again) to that SAME target: covers eviction between
+            # staging and dispatch, and external reservers (speculation)
+            # that want placement pinned away from a straggling provider.
+            # Nothing staging-side may unwind into the dispatch loop: an
+            # exception here would silently drop the whole popped batch.
+            try:
+                missing = staging.missing(t.inputs, name)
+                if not missing:
+                    staging.note_local(t.inputs, name)
+                    ready.append(t)  # replica hit: free read, dispatch now
+                    continue
+                with self._lock:
+                    self._blocked[t.uid] = t
+                gen = t.staging_attempts  # pins callbacks to THIS round
+                staging.stage_task(
+                    t, name, lambda ok, t=t, g=gen: self._staged(t, ok, g)
+                )
+            except Exception:
+                self.trace.add("stage_gate_error")
+                with self._lock:  # the failure path assumes blocked membership
+                    self._blocked.setdefault(t.uid, t)
+                self._staged(t, False, t.staging_attempts)
+        return ready
+
+    def _staged(self, t: Task, ok: bool, gen: int) -> None:
+        """Stage-in barrier resolved (may run on a clock thread).  ``gen``
+        is the task's staging_attempts when this round's barrier was armed:
+        a leftover waiter from a superseded round (e.g. a transfer that was
+        still flying when the gate's exception path already failed and
+        re-gated the task) must not act on the task's CURRENT round —
+        every failure bumps staging_attempts, invalidating older gens."""
+        if t.staging_attempts != gen:
+            return  # stale callback from a superseded staging round
+        if t.final:  # canceled while its bytes were in flight
+            with self._lock:
+                self._blocked.pop(t.uid, None)
+            self._release_reservation(t)
+            return
+        if ok:
+            # enqueue BEFORE leaving _blocked: in the opposite order the
+            # loop could observe heap-empty + blocked-empty in the gap and
+            # flash _idle (drain()/autoscaler demand would misread it)
+            self.enqueue([t])  # reservation rides along to bind_bulk
+            with self._lock:
+                self._blocked.pop(t.uid, None)
+            return
+        # transfer failed (site died / dataset lost / input never declared):
+        # release the gate's reservation and re-gate against the surviving
+        # topology after a short backoff, so an instantly-failing stage
+        # (unknown dataset) cannot burn every attempt in microseconds.  The
+        # backoff must NOT block this thread (_staged runs on the virtual
+        # clock's advancer thread or inline under the gate's clock.hold()),
+        # and it is REAL time by design: a virtual deadline might never be
+        # served on a manually-driven or closing clock.  The task stays in
+        # _blocked until the re-enqueue, so drain()/stalled counts never see
+        # a phantom idle window mid-retry.
+        self._release_reservation(t)
+        t.staging_attempts += 1
+        if t.staging_attempts > self.max_staging_attempts or self._stop.is_set():
+            # out of attempts — or the dispatcher is shutting down, where a
+            # retry would enqueue into a loop that will never pop it and
+            # leave the future unresolved forever
+            with self._lock:
+                self._blocked.pop(t.uid, None)
+            self._fail_task(
+                t, StagingError(f"task {t.uid}: staging failed for {t.inputs}")
+            )
+            return
+
+        def _requeue() -> None:
+            # enqueue BEFORE leaving _blocked (same idle-flash ordering as
+            # the success path above)
+            self.enqueue([t])
+            with self._lock:
+                self._blocked.pop(t.uid, None)
+
+        timer = threading.Timer(0.01, _requeue)
+        timer.daemon = True
+        timer.start()
+
+    def _release_reservation(self, t: Task) -> None:
+        if t.reserved_provider is not None:
+            self.broker.policy.unbind(t, t.reserved_provider)
+            t.reserved_provider = None
+
+    def stalled_on_staging(self) -> int:
+        with self._lock:
+            return len(self._blocked)
+
+    def stalled_in_backlog(self) -> int:
+        """Staging-blocked tasks the broker's backlog() scan ALSO counts
+        (re-gated retries from already-dispatched submissions): exactly the
+        overlap the autoscaler must subtract so tasks stalled purely on
+        staging never read as unmet demand."""
+        with self._lock:
+            return sum(1 for t in self._blocked.values() if t.in_submission)
 
     def _dispatch(self, batch: list[Task]) -> None:
         batch_id = _batch_ids.next()
@@ -282,6 +439,7 @@ class StreamingDispatcher:
     def _fail_task(self, t: Task, exc: BaseException) -> None:
         """Terminal failure: move tstate to a final state FIRST (workflow
         completion checks ``all(t.final)``), then resolve the future."""
+        self._release_reservation(t)
         t.try_advance(TaskState.CANCELED)
         try:
             if not t.done():
@@ -296,6 +454,7 @@ class StreamingDispatcher:
             "tasks_dispatched": self.tasks_dispatched,
             "mean_batch_size": round(self.tasks_dispatched / max(self.batches, 1), 2),
             "pending": self.pending(),
+            "staging_blocked": self.stalled_on_staging(),
             "queue_pressure": round(self.queue_pressure(), 3),
             "incoming_slots": self.broker.incoming_slots(),
             "retry_backoffs": self.retry_backoffs,

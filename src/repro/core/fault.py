@@ -214,6 +214,12 @@ def clone_for_speculation(task: Task) -> Task:
         duration=0.0,  # re-execution of a straggling sleep is instant by design
         payload=task.payload,
         max_retries=0,
+        # declared I/O rides along: when the shadow wins, the manager's
+        # on_task_finishing hook must register the outputs (at the shadow's
+        # site) BEFORE forward() resolves the original and unleashes its
+        # dependents — the original's own stage-out may still be minutes out
+        inputs=task.inputs,
+        outputs=task.outputs,
     )
     shadow.trace.add("speculative_clone_of:" + task.uid)
 

@@ -126,11 +126,16 @@ class CaaSManager:
         handle: ProviderHandle,
         on_task_done: Optional[Callable] = None,
         on_task_skipped: Optional[Callable] = None,
+        on_task_finishing: Optional[Callable] = None,
     ):
         self.handle = handle
         self.spec = handle.spec
         self.on_task_done = on_task_done
         self.on_task_skipped = on_task_skipped
+        # runs BEFORE mark_done resolves the future: resolving enqueues
+        # dependent tasks synchronously, so anything a dependent must be able
+        # to observe (declared outputs in the staging registry) registers here
+        self.on_task_finishing = on_task_finishing
         self._pool = ThreadPoolExecutor(
             max_workers=self.spec.concurrency, thread_name_prefix=f"caas-{handle.name}"
         )
@@ -221,6 +226,10 @@ class CaaSManager:
                 if self.on_task_done:
                     self.on_task_done(task, self.handle.name, failed=True)
             return
+        # skip on duplicate completions (speculation / post-rebind finishes):
+        # mark_done no-ops those, and the hook must not re-register outputs
+        if self.on_task_finishing and not task.final:
+            self.on_task_finishing(task, self.handle.name)
         task.mark_done(result)
         with self._lock:
             self.completed += 1

@@ -25,11 +25,14 @@ class PilotManager:
         handle: ProviderHandle,
         on_task_done: Optional[Callable] = None,
         on_task_skipped: Optional[Callable] = None,
+        on_task_finishing: Optional[Callable] = None,
     ):
         self.handle = handle
         self.spec = handle.spec
         self.on_task_done = on_task_done
         self.on_task_skipped = on_task_skipped
+        # pre-resolution hook: see CaaSManager.on_task_finishing
+        self.on_task_finishing = on_task_finishing
         self.trace = Trace()
         self._q: queue.Queue = queue.Queue()
         self._down = threading.Event()
@@ -144,6 +147,9 @@ class PilotManager:
                 if self.on_task_done:
                     self.on_task_done(task, self.handle.name, failed=True)
             return
+        # duplicate completions skip the hook: see CaaSManager._run_task
+        if self.on_task_finishing and not task.final:
+            self.on_task_finishing(task, self.handle.name)
         task.mark_done(result)
         with self._stats_lock:
             self.completed += 1

@@ -19,7 +19,6 @@ import threading
 from collections import defaultdict
 from typing import Optional
 
-from repro.core.provider import ProviderHandle
 from repro.core.task import Task
 
 
@@ -40,6 +39,21 @@ class NoEligibleProvider(RuntimeError):
 
 class Policy:
     name = "base"
+    # data-aware placement (core/staging.py): when a StagingService is
+    # attached, ``data_cost_s`` charges cold reads their modeled transfer
+    # time; replica reads are free.  Policies that fold this into _choose
+    # become locality-aware; the rest stay locality-blind (the exp8 control).
+    staging = None
+
+    def attach_staging(self, staging) -> None:
+        self.staging = staging
+
+    def data_cost_s(self, task: Task, name: str) -> float:
+        """Modeled seconds to materialize the task's missing input bytes at
+        target ``name``'s site (0 when staging is off or inputs resident)."""
+        if self.staging is None or not task.inputs:
+            return 0.0
+        return self.staging.transfer_cost_s(task.inputs, name)
 
     def bind(self, task: Task, providers: list) -> str:
         """providers: bind targets — ProviderHandle or ProviderGroup."""
@@ -57,7 +71,13 @@ class Policy:
         Atomic with respect to stateful policies: eligibility is validated
         for the WHOLE batch before any _choose mutates load accounting, so a
         NoEligibleProvider raise leaves outstanding/EWMA state untouched and
-        the caller can safely re-bind the placeable remainder."""
+        the caller can safely re-bind the placeable remainder.
+
+        A task carrying a staging-gate reservation (``reserved_provider``,
+        core/dispatcher.py) is routed back to the target the gate already
+        bound — and accounted — it to: its inputs were staged to that site on
+        that promise.  A reservation whose target has since died is released
+        (``unbind``) and the task re-chooses normally."""
         sig_cache: dict = {}
         eligible = []
         for t in tasks:
@@ -67,7 +87,17 @@ class Policy:
                 ok = self._eligible(t, providers)
                 sig_cache[sig] = ok
             eligible.append(ok)
-        return [self._choose(t, ok) for t, ok in zip(tasks, eligible)]
+        names = []
+        for t, ok in zip(tasks, eligible):
+            reserved, t.reserved_provider = t.reserved_provider, None
+            if reserved is not None:
+                if any(p.name == reserved for p in ok):
+                    # load already accounted at reservation time: no _choose
+                    names.append(reserved)
+                    continue
+                self.unbind(t, reserved)  # target gone: release, re-choose
+            names.append(self._choose(t, ok))
+        return names
 
     def observe(self, provider: str, runtime_s: float) -> None:
         """Runtime feedback hook (used by adaptive policies).  ``provider``
@@ -168,21 +198,26 @@ class AdaptivePolicy(Policy):
         self.outstanding: dict[str, int] = defaultdict(int)
         self._lock = threading.Lock()
 
+    def _fleet_prior(self) -> float:
+        """Neutral EWMA prior for providers with no history yet (callers
+        hold self._lock): a member that appeared mid-run (elastic scale-out)
+        is assumed as fast as the current fleet average, not 1000x faster —
+        an optimistic default would flood brand-new capacity before its
+        first completion."""
+        known = [v for v in self.ewma.values() if v > 0]
+        return (sum(known) / len(known)) if known else 1e-3
+
+    def _expected_finish_s(self, name: str, prior: float) -> float:
+        """Expected finish time ~ (queue + 1) x service time (callers hold
+        self._lock).  Shared by the adaptive and data-gravity policies so
+        the queueing model cannot silently diverge between them."""
+        svc = max(self.ewma.get(name, prior), 1e-6)
+        return (self.outstanding[name] + 1) * svc
+
     def _choose(self, task: Task, ok: list) -> str:
         with self._lock:
-            # neutral prior for providers with no history yet: a member that
-            # appeared mid-run (elastic scale-out) is assumed as fast as the
-            # current fleet average, not 1000x faster — an optimistic default
-            # would flood brand-new capacity before its first completion
-            known = [v for v in self.ewma.values() if v > 0]
-            prior = (sum(known) / len(known)) if known else 1e-3
-
-            def score(p: ProviderHandle) -> float:
-                rate = 1.0 / max(self.ewma.get(p.name, prior), 1e-6)
-                # expected finish time ~ (queue + 1) / service rate
-                return (self.outstanding[p.name] + 1) / rate
-
-            choice = min(ok, key=score)
+            prior = self._fleet_prior()
+            choice = min(ok, key=lambda p: self._expected_finish_s(p.name, prior))
             self.outstanding[choice.name] += 1
             return choice.name
 
@@ -207,9 +242,44 @@ class AdaptivePolicy(Policy):
             self.outstanding.pop(name, None)
 
 
+class DataGravityPolicy(AdaptivePolicy):
+    """Locality-aware binding (beyond-paper; StreamFlow-style): expected
+    completion = modeled stage-in time for the task's missing input bytes
+    (core/staging.py: replica reads free, cold reads charged the link model)
+    + the adaptive queue/service-time estimate.  Placement therefore prefers
+    providers already holding — or co-located with — a task's inputs, and
+    only pays a cross-site transfer when the data-local queue is long enough
+    to make shipping bytes cheaper than waiting."""
+
+    name = "data_gravity"
+
+    def _choose(self, task: Task, ok: list) -> str:
+        # staging reads (registry/engine locks) happen OUTSIDE the policy
+        # lock: staging never calls back into policies, but keeping the
+        # ordering one-way makes that invariant structural
+        data_cost = {p.name: self.data_cost_s(task, p.name) for p in ok}
+        with self._lock:
+            prior = self._fleet_prior()
+            choice = min(
+                ok,
+                key=lambda p: (
+                    data_cost[p.name] + self._expected_finish_s(p.name, prior),
+                    p.name,
+                ),
+            )
+            self.outstanding[choice.name] += 1
+            return choice.name
+
+
 POLICIES = {
     p.name: p
-    for p in (RoundRobinPolicy, CapabilityPolicy, LoadAwarePolicy, AdaptivePolicy)
+    for p in (
+        RoundRobinPolicy,
+        CapabilityPolicy,
+        LoadAwarePolicy,
+        AdaptivePolicy,
+        DataGravityPolicy,
+    )
 }
 
 

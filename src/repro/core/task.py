@@ -79,6 +79,8 @@ class Task(Future):
         duration: float = 0.0,  # for kind="sleep"
         payload: Any = None,
         max_retries: int = 2,
+        inputs: Optional[list[str]] = None,
+        outputs: Optional[dict[str, float]] = None,
     ):
         super().__init__()
         assert kind in ("noop", "callable", "compute", "sleep"), kind
@@ -102,6 +104,22 @@ class Task(Future):
         # tasks bind first and deeper-workflow tasks backfill idle capacity
         self.depth: int = 0
         self.workflow: Optional[str] = None
+        # declared data dependencies (core/staging.py): ``inputs`` names
+        # datasets that must be resident at the executing site before the
+        # task runs; ``outputs`` maps produced dataset name -> size_mb,
+        # registered at the executing site on completion (stage-out).
+        self.inputs: list[str] = list(inputs or [])
+        self.outputs: dict[str, float] = dict(outputs or {})
+        # placement reserved by the dispatcher's staging gate: the binding
+        # policy already chose (and accounted for) this target, so dispatch
+        # must honor it — inputs were staged to its site on that promise
+        self.reserved_provider: Optional[str] = None
+        self.staging_attempts: int = 0
+        # True once a dispatch round registered the task in a Submission the
+        # broker's backlog() scan can see: the autoscaler uses it to subtract
+        # staging-stalled retries from demand without double-discounting
+        # first-time tasks (which are in neither the ready heap nor backlog)
+        self.in_submission: bool = False
         self.trace = Trace()
         self._state_lock = threading.RLock()
         self._tstate = TaskState.NEW
@@ -197,4 +215,6 @@ def describe(task: Task) -> dict:
         "step_kind": task.step_kind,
         "duration": task.duration,
         "retries": task.retries,
+        "inputs": list(task.inputs),
+        "outputs": dict(task.outputs),
     }

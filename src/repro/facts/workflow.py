@@ -5,6 +5,14 @@ Each stage is a ``callable`` Task; inter-stage data moves through the
 provider-local site store (pickled npz blobs), so a stage re-bound to a
 different provider after a failure still finds its inputs in the shared
 store - the same pattern Hydra uses with cloud object stores.
+
+Data footprints (paper: ~1 core / ~2 GB per stage): when a
+``DatasetRegistry`` (core/staging.py) is passed, every stage declares its
+real data dependencies — a shared climate-forcing dataset feeding *every*
+instance's preprocess stage, plus the per-instance pre/fit/proj/result
+chain — so the staging subsystem charges cross-site movement and the
+data-gravity policy can keep a chain's stages where its bytes already live.
+The physical pickle blobs stay tiny; the registry carries the modeled sizes.
 """
 from __future__ import annotations
 
@@ -16,6 +24,13 @@ from repro.core.managers.workflow import Workflow
 from repro.core.task import Resources, Task
 from repro.facts import model as facts
 
+# Modeled footprints (MB), shaped after the paper's FACTS deployment: the
+# forcing archive is the heavyweight shared input; projections dominate the
+# per-instance chain.
+FORCING_DATASET = "facts/forcing/era5"
+FORCING_MB = 2048.0
+STAGE_MB = {"pre": 512.0, "fit": 64.0, "proj": 1024.0, "result": 16.0}
+
 
 def _put(dm: DataManager, rel: str, obj) -> None:
     dm.put_bytes("shared", rel, pickle.dumps(obj))
@@ -25,15 +40,23 @@ def _get(dm: DataManager, rel: str):
     return pickle.loads(dm.get_bytes("shared", rel))
 
 
+def register_forcing(registry) -> None:
+    """Declare the shared climate-forcing input (idempotent): one pinned
+    replica in the shared store, the cold-read source every site pulls."""
+    registry.add(FORCING_DATASET, FORCING_MB, sites=["shared"], pinned=True)
+
+
 def make_workflow(
     dm: DataManager,
     instance: int,
     seed: int = 0,
     n_samples: int = facts.N_SAMPLES,
     provider: Optional[str] = None,
+    registry=None,
 ) -> Workflow:
     """One FACTS instance: pre -> fit -> project -> post (1 core, ~2GB each
-    in the paper; tiny here, same DAG shape)."""
+    in the paper; tiny here, same DAG shape).  With ``registry`` the stages
+    declare their modeled data footprints for the staging subsystem."""
     wf = Workflow(name=f"facts.{instance:05d}")
     base = f"facts/{instance:05d}"
     res = Resources(cpus=1, memory_mb=2048)
@@ -62,10 +85,45 @@ def make_workflow(
         _put(dm, f"{base}/result.pkl", out)
         return out
 
-    t_pre = wf.add(Task(kind="callable", fn=stage_pre, resources=res, provider=provider))
-    t_fit = wf.add(Task(kind="callable", fn=stage_fit, resources=res, provider=provider), deps=[t_pre])
-    t_proj = wf.add(Task(kind="callable", fn=stage_project, resources=res, provider=provider), deps=[t_fit])
-    wf.add(Task(kind="callable", fn=stage_post, resources=res, provider=provider), deps=[t_proj])
+    io = {"pre": {}, "fit": {}, "proj": {}, "post": {}}
+    if registry is not None:
+        register_forcing(registry)
+        io = {
+            "pre": dict(
+                inputs=[FORCING_DATASET],
+                outputs={f"{base}/pre": STAGE_MB["pre"]},
+            ),
+            "fit": dict(
+                inputs=[f"{base}/pre"],
+                outputs={f"{base}/fit": STAGE_MB["fit"]},
+            ),
+            "proj": dict(
+                inputs=[f"{base}/pre", f"{base}/fit"],
+                outputs={f"{base}/proj": STAGE_MB["proj"]},
+            ),
+            "post": dict(
+                inputs=[f"{base}/proj"],
+                outputs={f"{base}/result": STAGE_MB["result"]},
+            ),
+        }
+
+    t_pre = wf.add(
+        Task(kind="callable", fn=stage_pre, resources=res, provider=provider, **io["pre"])
+    )
+    t_fit = wf.add(
+        Task(kind="callable", fn=stage_fit, resources=res, provider=provider, **io["fit"]),
+        deps=[t_pre],
+    )
+    t_proj = wf.add(
+        Task(
+            kind="callable", fn=stage_project, resources=res, provider=provider, **io["proj"]
+        ),
+        deps=[t_fit],
+    )
+    wf.add(
+        Task(kind="callable", fn=stage_post, resources=res, provider=provider, **io["post"]),
+        deps=[t_proj],
+    )
     return wf
 
 

@@ -1,8 +1,20 @@
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import warnings
 
 warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+
+def wait_until(pred, timeout=15.0, poll=0.02):
+    """Poll a predicate in REAL time (thread progress, not clock time) —
+    shared by the autoscaler and staging suites."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(poll)
+    return pred()

@@ -25,13 +25,7 @@ from repro.core.task import TaskState
 from repro.runtime.clock import virtual_time
 
 
-def wait_until(pred, timeout=15.0, poll=0.02):
-    deadline = time.monotonic() + timeout
-    while time.monotonic() < deadline:
-        if pred():
-            return True
-        time.sleep(poll)
-    return pred()
+from conftest import wait_until
 
 
 def cloud_template(name="pool", concurrency=4, **kw):

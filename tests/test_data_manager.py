@@ -3,7 +3,7 @@ import os
 
 import pytest
 
-from repro.core.managers.data import DataManager
+from repro.core.managers.data import DataManager, UnknownSiteError
 
 
 @pytest.fixture
@@ -37,6 +37,37 @@ def test_link_is_zero_copy(dm):
 def test_path_escape_rejected(dm):
     with pytest.raises(ValueError):
         dm.put_bytes("jet2", "../../etc/passwd", b"nope")
+
+
+def test_sibling_site_with_colliding_name_prefix_rejected(tmp_path):
+    """Regression: startswith-based containment let ``../ab/x`` escape site
+    ``a`` into sibling site ``ab`` (shared string prefix, different dir)."""
+    d = DataManager(str(tmp_path))
+    d.register_site("a")
+    d.register_site("ab")
+    with pytest.raises(ValueError):
+        d.put_bytes("a", "../ab/x.bin", b"nope")
+    with pytest.raises(ValueError):
+        d.list("a", "../ab")
+    # legitimate paths inside each site still resolve
+    d.put_bytes("ab", "x.bin", b"yes")
+    assert d.get_bytes("ab", "x.bin") == b"yes"
+
+
+def test_unknown_site_raises_instead_of_silently_creating(dm, tmp_path):
+    """Regression: copy/move/link to a never-registered site used to mint a
+    fresh site directory and strand the data there."""
+    dm.put_bytes("jet2", "in/a.bin", b"hello")
+    with pytest.raises(UnknownSiteError):
+        dm.copy("jet2", "in/a.bin", "typo", "a.bin")
+    with pytest.raises(UnknownSiteError):
+        dm.move("jet2", "in/a.bin", "typo", "a.bin")
+    with pytest.raises(UnknownSiteError):
+        dm.link("jet2", "in/a.bin", "typo", "a.bin")
+    with pytest.raises(UnknownSiteError):
+        dm.copy("typo", "a.bin", "jet2", "a.bin")
+    assert not os.path.exists(os.path.join(str(tmp_path), "typo"))
+    assert dm.get_bytes("jet2", "in/a.bin") == b"hello"  # source untouched
 
 
 def test_stage_checkpoint(dm, tmp_path):

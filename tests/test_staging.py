@@ -1,0 +1,522 @@
+"""Data-aware staging subsystem (core/staging.py): registry/LRU semantics,
+clock-driven transfer determinism, per-link queueing, gravity placement,
+dispatcher stage-in/stage-out, autoscaler pressure, and chaos re-routing."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import (
+    Hydra,
+    ProviderSpec,
+    StagingError,
+    Task,
+    Workflow,
+    WorkflowManager,
+)
+from repro.core.autoscaler import Autoscaler, LaunchSpec, ProviderPool, cloud_startup
+from repro.core.policy import make_policy
+from repro.core.provider import ProviderHandle
+from repro.core.staging import DatasetRegistry, StagingService, TransferEngine
+from repro.runtime.clock import virtual_time
+
+from conftest import wait_until
+
+
+# ---------------------------------------------------------------------------
+# DatasetRegistry: replicas, capacity, LRU eviction
+# ---------------------------------------------------------------------------
+
+
+def test_registry_replicas_and_location():
+    reg = DatasetRegistry()
+    reg.register_site("a", "cloud")
+    reg.register_site("b", "hpc")
+    reg.add("d1", 100.0, sites=["shared", "a"])
+    assert reg.locate("d1") == ["a", "shared"]
+    assert reg.resident("d1", "a") and not reg.resident("d1", "b")
+    assert reg.missing(["d1"], "b") == ["d1"]
+    assert reg.missing_mb(["d1"], "b") == 100.0
+    assert reg.resident_mb(["d1"], "a") == 100.0
+
+
+def test_registry_lru_eviction_under_capacity_pressure():
+    reg = DatasetRegistry()
+    reg.register_site("s", "cloud", capacity_mb=120.0)
+    for name in ("x", "y", "z"):
+        reg.add(name, 40.0, sites=["shared"])
+        reg.place_replica(name, "s")
+    # x is oldest, but a touch makes it hottest -> y becomes the LRU victim
+    reg.touch("x", "s")
+    reg.add("w", 40.0, sites=["shared"])
+    evicted = reg.place_replica("w", "s")
+    assert evicted == ["y"]
+    assert reg.resident("x", "s") and reg.resident("w", "s")
+    assert reg.locate("y") == ["shared"]  # the shared copy survives
+    assert reg.evictions == 1
+
+
+def test_registry_never_evicts_last_copy_or_pinned():
+    reg = DatasetRegistry()
+    reg.register_site("s", "cloud", capacity_mb=100.0)
+    reg.add("only_copy", 60.0)  # nowhere else: eviction would be data loss
+    reg.place_replica("only_copy", "s")
+    reg.add("big", 60.0, sites=["shared"])
+    with pytest.raises(StagingError):
+        reg.place_replica("big", "s")
+    assert reg.resident("only_copy", "s")
+
+
+def test_registry_oversized_dataset_rejected():
+    reg = DatasetRegistry()
+    reg.register_site("s", "cloud", capacity_mb=100.0)
+    reg.add("huge", 200.0, sites=["shared"])
+    with pytest.raises(StagingError):
+        reg.place_replica("huge", "s")
+
+
+# ---------------------------------------------------------------------------
+# TransferEngine: clock-driven, deterministic, link-limited
+# ---------------------------------------------------------------------------
+
+
+def _engine(clock_sites=(("a", "cloud"), ("b", "cloud"), ("c", "hpc")), seed=0, **kw):
+    reg = DatasetRegistry()
+    for name, platform in clock_sites:
+        reg.register_site(name, platform)
+    return reg, TransferEngine(reg, seed=seed, **kw)
+
+
+def test_replica_read_is_free_and_immediate():
+    with virtual_time(auto_advance=False):
+        reg, eng = _engine()
+        reg.add("d", 100.0, sites=["a"])
+        done = []
+        eng.fetch("d", "a", done.append)
+        assert done == [True]  # no clock advance needed: replica hit
+        assert eng.cache_hits == 1 and eng.mb_moved == 0.0
+
+
+def test_cold_read_completes_at_modeled_deadline():
+    with virtual_time(auto_advance=False) as clock:
+        reg, eng = _engine(seed=3)
+        reg.add("d", 120.0, sites=["a"])
+        done = []
+        eng.fetch("d", "b", done.append)
+        assert done == [] and eng.active_transfers() == 1
+        # ~120MB over a ~120MB/s cloud link: far from done after 0.2s...
+        clock.advance(0.2)
+        assert done == []
+        # ...and done once virtual time passes the sampled duration
+        clock.advance(30.0)
+        assert done == [True]
+        assert reg.resident("d", "b") and eng.mb_moved == 120.0
+
+
+def test_concurrent_fetches_for_same_destination_piggyback():
+    with virtual_time(auto_advance=False) as clock:
+        reg, eng = _engine()
+        reg.add("d", 50.0, sites=["a"])
+        done = []
+        eng.fetch("d", "b", done.append)
+        eng.fetch("d", "b", done.append)  # same (dataset, dst): no 2nd copy
+        assert eng.active_transfers() == 1
+        clock.advance(60.0)
+        assert done == [True, True]
+        assert eng.completed == 1 and eng.mb_moved == 50.0
+
+
+def test_per_link_concurrency_queues_excess_transfers():
+    with virtual_time(auto_advance=False) as clock:
+        reg, eng = _engine(seed=1, max_per_link=2)
+        for i in range(3):
+            reg.add(f"d{i}", 100.0, sites=["a"])
+        done = []
+        for i in range(3):
+            eng.fetch(f"d{i}", "b", done.append)
+        assert eng.active_transfers() == 2 and eng.queued_transfers() == 1
+        for _ in range(3):  # queued transfer starts only when a slot frees
+            clock.advance(500.0)
+        assert done == [True, True, True]
+        assert eng.queue_wait_s > 0.0  # the third transfer waited for a slot
+
+
+def _transfer_schedule(seed: int):
+    with virtual_time(auto_advance=False) as clock:
+        reg, eng = _engine(seed=seed, max_per_link=2)
+        for i in range(6):
+            reg.add(f"d{i}", 80.0 + 30.0 * i, sites=["shared"])
+        results = []
+        for i in range(6):
+            eng.fetch(f"d{i}", ("a", "b", "c")[i % 3], results.append)
+        for _ in range(300):
+            if eng.completed == 6:
+                break
+            clock.advance(1.0)
+        assert eng.completed == 6
+        return [(r["dataset"], r["src"], r["dst"], round(r["t"], 9)) for r in eng.log]
+
+
+def test_transfer_schedule_deterministic_under_virtual_clock():
+    # same seed => byte-for-byte identical completion schedule; a different
+    # seed draws different bandwidth samples and reorders completions
+    assert _transfer_schedule(7) == _transfer_schedule(7)
+    assert _transfer_schedule(7) != _transfer_schedule(8)
+
+
+def test_source_site_death_reroutes_active_transfer():
+    with virtual_time(auto_advance=False) as clock:
+        reg, eng = _engine()
+        reg.add("d", 200.0, sites=["a", "shared"])  # a is the faster source
+        done = []
+        eng.fetch("d", "b", done.append)
+        (tr,) = [t for trs in eng._active.values() for t in trs]
+        assert tr.src == "a"
+        lost = eng.site_down("a")  # mid-flight: replica set shrinks to shared
+        assert lost == []  # shared still holds a copy
+        clock.advance(500.0)
+        assert done == [True]
+        assert eng.reroutes == 1 and reg.resident("d", "b")
+
+
+def test_site_death_with_last_replica_fails_waiters():
+    with virtual_time(auto_advance=False):
+        reg, eng = _engine()
+        reg.add("d", 100.0, sites=["a"])  # ONLY copy lives on a
+        done = []
+        eng.fetch("d", "b", done.append)
+        lost = eng.site_down("a")
+        assert lost == ["d"]
+        assert done == [False]  # no surviving source: waiters see failure
+
+
+# ---------------------------------------------------------------------------
+# Data-gravity policy
+# ---------------------------------------------------------------------------
+
+
+def test_data_gravity_policy_prefers_replica_holding_provider():
+    svc = StagingService()
+    svc.register_site("a", "cloud")
+    svc.register_site("b", "cloud")
+    svc.registry.add("hot", 1000.0, sites=["a"])
+    pol = make_policy("data_gravity")
+    pol.attach_staging(svc)
+    ha = ProviderHandle(spec=ProviderSpec(name="a"))
+    hb = ProviderHandle(spec=ProviderSpec(name="b"))
+    t = Task(kind="noop", inputs=["hot"])
+    assert pol.bind(t, [ha, hb]) == "a"
+    # and the cold target was charged the modeled transfer, not zero
+    assert pol.data_cost_s(t, "b") > 0.0 == pol.data_cost_s(t, "a")
+
+
+def test_data_gravity_ships_bytes_when_local_queue_is_long():
+    svc = StagingService()
+    svc.register_site("a", "cloud")
+    svc.register_site("b", "cloud")
+    svc.registry.add("small", 1.0, sites=["a"])
+    pol = make_policy("data_gravity")
+    pol.attach_staging(svc)
+    pol.observe("a", 10.0)  # a is slow and
+    pol.observe("b", 10.0)
+    ha = ProviderHandle(spec=ProviderSpec(name="a"))
+    hb = ProviderHandle(spec=ProviderSpec(name="b"))
+    for _ in range(5):  # ... deeply queued
+        pol.bind(Task(kind="noop"), [ha])
+    t = Task(kind="noop", inputs=["small"])
+    # 1MB transfer (~0.06s) beats waiting behind 5 x 10s of queue: ship it
+    assert pol.bind(t, [ha, hb]) == "b"
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher integration: stage-in gate + stage-out
+# ---------------------------------------------------------------------------
+
+
+def test_stage_in_before_dispatch_and_stage_out_on_completion(tmp_path):
+    with virtual_time():
+        h = Hydra(
+            pod_store="memory",
+            policy="data_gravity",
+            streaming=True,
+            batch_window=0.001,
+            workdir=str(tmp_path),
+        )
+        h.register_provider(ProviderSpec(name="a", platform="cloud"))
+        h.register_provider(ProviderSpec(name="b", platform="hpc", connector="pilot"))
+        h.staging.registry.add("in0", 256.0, sites=["shared"], pinned=True)
+        wf = Workflow(name="stagewf")
+        t1 = wf.add(Task(kind="noop", inputs=["in0"], outputs={"mid": 64.0}))
+        t2 = wf.add(Task(kind="noop", inputs=["mid"], outputs={"out": 8.0}), deps=[t1])
+        WorkflowManager(h).run([wf], timeout=120)
+        assert wf.done and not wf.failed
+        stats = h.staging_stats()
+        # one cold pull of in0; t2 rode gravity to t1's site, replica-free
+        assert stats["mb_moved"] == 256.0
+        assert stats["cold_reads"] == 1 and stats["cache_hits"] >= 1
+        assert stats["stage_outs"] == 2  # mid + out registered on completion
+        assert "stage_in_start" in " ".join(e for e, _ in t1.trace.events)
+        assert t2.provider == t1.provider  # data gravity kept the chain local
+        assert h.staging.registry.resident("out", t2.provider)
+        h.shutdown(wait=True)
+
+
+def test_replica_blind_arm_moves_more_bytes_30pct(tmp_path):
+    """The exp8 acceptance criterion at mini scale: locality-aware placement
+    moves >= 30% fewer bytes than locality-blind at 4 sites."""
+
+    def run_arm(policy: str) -> float:
+        with virtual_time():
+            h = Hydra(
+                pod_store="memory",
+                policy=policy,
+                streaming=True,
+                batch_window=0.001,
+                workdir=str(tmp_path / policy),
+            )
+            for name, platform in (
+                ("jet2", "cloud"),
+                ("chi", "cloud"),
+                ("aws", "cloud"),
+                ("bridges2", "hpc"),
+            ):
+                h.register_provider(
+                    ProviderSpec(
+                        name=name,
+                        platform=platform,
+                        connector="pilot" if platform == "hpc" else "caas",
+                        concurrency=4,
+                    )
+                )
+            for k in range(3):
+                h.staging.registry.add(
+                    f"shard-{k}", 512.0, sites=["shared"], pinned=True
+                )
+            wfs = []
+            for i in range(9):
+                wf = Workflow(name=f"mini8.{i}-{policy}")
+                t1 = wf.add(
+                    Task(
+                        kind="sleep",
+                        duration=1.0,
+                        inputs=[f"shard-{i % 3}"],
+                        outputs={f"m{i}-{policy}/a": 256.0},
+                    )
+                )
+                wf.add(
+                    Task(
+                        kind="sleep",
+                        duration=1.0,
+                        inputs=[f"m{i}-{policy}/a"],
+                        outputs={f"m{i}-{policy}/b": 16.0},
+                    ),
+                    deps=[t1],
+                )
+                wfs.append(wf)
+            WorkflowManager(h).run(wfs, timeout=600)
+            assert all(w.done and not w.failed for w in wfs)
+            moved = h.staging_stats()["mb_moved"]
+            h.shutdown(wait=True)
+        return moved
+
+    blind = run_arm("round_robin")
+    aware = run_arm("data_gravity")
+    assert aware <= 0.7 * blind, f"aware={aware} blind={blind}"
+
+
+def test_unknown_input_fails_task_without_dropping_batchmates(tmp_path):
+    """Regression: an input name never registered used to raise out of the
+    staging gate and silently drop the whole popped batch (hanging every
+    batch-mate); now the bad task surfaces StagingError and the rest run."""
+    with virtual_time():
+        h = Hydra(
+            pod_store="memory",
+            streaming=True,
+            batch_window=0.001,
+            workdir=str(tmp_path),
+        )
+        h.register_provider(ProviderSpec(name="a"))
+        good = Task(kind="noop")
+        bad = Task(kind="noop", inputs=["never-registered"])
+        h.dispatch([bad, good])
+        assert wait_until(lambda: good.done() and bad.done(), timeout=10.0)
+        assert good.exception() is None
+        assert isinstance(bad.exception(), StagingError)
+        h.shutdown(wait=True)
+
+
+def test_drain_waits_for_staging_blocked_tasks(tmp_path):
+    """Regression: drain() used to report idle while tasks were parked on
+    stage-in (out of the ready heap but still owed a dispatch)."""
+    with virtual_time(auto_advance=False) as clock:
+        h = Hydra(
+            pod_store="memory",
+            streaming=True,
+            batch_window=0.0,
+            workdir=str(tmp_path),
+        )
+        h.register_provider(ProviderSpec(name="a"))
+        h.staging.registry.add("d", 300.0, sites=["shared"], pinned=True)
+        t = Task(kind="noop", inputs=["d"])
+        h.dispatch([t])
+        d = h.dispatcher()
+        assert wait_until(lambda: d.stalled_on_staging() == 1)
+        assert not d.drain(timeout=0.2)  # parked task: NOT idle
+        ok = wait_until(lambda: (clock.advance(5.0), t.done())[1], timeout=10.0)
+        assert ok and t.exception() is None
+        assert d.drain(timeout=5.0)
+        h.shutdown(wait=True)
+
+
+def test_registry_resize_keeps_capacity_accounting_consistent():
+    """Regression: re-declaring a dataset at a new size left used_mb
+    accounted at the old size wherever replicas already lived."""
+    reg = DatasetRegistry()
+    reg.register_site("s", "cloud", capacity_mb=300.0)
+    reg.add("x", 100.0, sites=["shared"])
+    reg.place_replica("x", "s")
+    reg.add("x", 200.0)  # retry re-declares the output bigger
+    assert reg.used_mb("s") == 200.0
+    reg.drop_replica("x", "s")
+    assert reg.used_mb("s") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler: staging-stalled tasks are not demand
+# ---------------------------------------------------------------------------
+
+
+def test_autoscaler_pressure_ignores_staging_stalled_tasks(tmp_path):
+    with virtual_time(auto_advance=False):
+        h = Hydra(
+            pod_store="memory",
+            streaming=True,
+            batch_window=0.0,
+            workdir=str(tmp_path),
+        )
+        h.register_provider(ProviderSpec(name="a", platform="cloud", concurrency=2))
+        h.staging.registry.add("big", 4096.0, sites=["shared"], pinned=True)
+        tasks = [Task(kind="noop", inputs=["big"]) for _ in range(8)]
+        h.dispatch(tasks)
+        d = h.dispatcher()
+        # the clock never advances, so every task parks on its stage-in
+        assert wait_until(lambda: d.stalled_on_staging() == 8)
+        assert d.pending() == 0  # parked OUTSIDE the ready heap
+        pool = ProviderPool(
+            [LaunchSpec(template=ProviderSpec(name="elastic", platform="cloud"),
+                        latency=cloud_startup())]
+        )
+        scaler = Autoscaler(h, pool)  # not started: we only read the signal
+        assert scaler.pressure() == 0.0  # stalled-on-bytes is not unmet demand
+        h.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# Chaos: provider death mid-transfer
+# ---------------------------------------------------------------------------
+
+
+def test_provider_death_mid_transfer_reroutes_and_no_task_fails(tmp_path):
+    with virtual_time(auto_advance=False) as clock:
+        h = Hydra(
+            pod_store="memory",
+            streaming=True,
+            batch_window=0.0,
+            workdir=str(tmp_path),
+        )
+        h.register_provider(ProviderSpec(name="a", platform="cloud"))
+        h.register_provider(ProviderSpec(name="b", platform="cloud"))
+        # replica on a (fast intra-cloud source) + shared (survivor)
+        h.staging.registry.add("d", 600.0, sites=["shared"], pinned=True)
+        h.staging.registry.place_replica("d", "a")
+        t = Task(kind="noop", inputs=["d"], provider="b")  # pin forces a pull
+        h.dispatch([t])
+        eng = h.staging.engine
+        assert wait_until(lambda: eng.active_transfers() == 1)
+        (tr,) = [x for trs in eng._active.values() for x in trs]
+        assert tr.src == "a"  # the faster cloud->cloud link won the pick
+        h.remove_provider("a", drain=False, deregister=True)  # dies mid-flight
+        # drive virtual time until the re-routed transfer lands and the task
+        # dispatches, runs, and completes — with ZERO failed tasks
+        ok = wait_until(
+            lambda: (clock.advance(5.0), t.done())[1], timeout=10.0
+        )
+        assert ok and t.exception() is None
+        assert eng.reroutes == 1
+        assert h.staging.registry.resident("d", "b")
+        assert h.staging_stats()["transfer_failures"] == 0
+        h.shutdown(wait=True)
+
+
+def test_graceful_drain_evacuates_last_copy_data(tmp_path):
+    """Regression: an elastic scale-in (voluntary drain) used to destroy the
+    only replica of intermediate stage-out data, terminally failing queued
+    downstream tasks; the drain now spills last copies to the shared store.
+    A hard outage (drain=False) still loses the site's data — that is the
+    chaos scenario, not this one."""
+    from repro.core.managers.data import UnknownSiteError
+
+    h = Hydra(pod_store="memory", streaming=True, workdir=str(tmp_path))
+    h.register_provider(ProviderSpec(name="a"))
+    h.register_provider(ProviderSpec(name="b"))
+    h.staging.registry.add("solo", 50.0)
+    h.staging.registry.place_replica("solo", "a")  # ONLY copy, on a
+    h.remove_provider("a", drain=True, deregister=True)
+    assert h.staging.registry.locate("solo") == ["shared"]
+    assert h.staging_stats()["evacuated_mb"] == 50.0
+    # and the physical namespace is closed: no stranding data on dead sites
+    with pytest.raises(UnknownSiteError):
+        h.data.put_bytes("a", "x.bin", b"nope")
+    h.shutdown(wait=True)
+
+
+def test_failover_rebinds_io_tasks_through_the_gate(tmp_path):
+    """Regression: the broker's failover re-bind used to dispatch a task
+    with declared inputs straight to the surviving provider — a site its
+    inputs were never staged to.  It must re-enter through the gate."""
+    h = Hydra(
+        pod_store="memory",
+        streaming=True,
+        batch_window=0.001,
+        workdir=str(tmp_path),
+    )
+    h.register_provider(ProviderSpec(name="a", platform="cloud"))
+    h.register_provider(ProviderSpec(name="b", platform="cloud"))
+    h.staging.registry.add("in0", 20.0, sites=["shared"], pinned=True)
+    t = Task(kind="sleep", duration=1.0, inputs=["in0"], provider="a")
+    h.dispatch([t])
+    from repro.core import TaskState
+
+    assert wait_until(lambda: t.tstate == TaskState.RUNNING, timeout=10.0)
+    h.remove_provider("a", drain=False, deregister=True)  # mid-execution
+    assert wait_until(lambda: t.done(), timeout=10.0)
+    assert t.exception() is None
+    assert t.provider == "b"
+    assert "rebind_via_gate" in [e for e, _ in t.trace.events]
+    assert h.staging.registry.resident("in0", "b")  # staged before re-run
+    h.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# DataManager <-> registry coherence
+# ---------------------------------------------------------------------------
+
+
+def test_physical_verbs_update_logical_replicas(tmp_path):
+    from repro.core.managers.data import DataManager
+
+    reg = DatasetRegistry()
+    reg.register_site("jet2", "cloud")
+    reg.register_site("aws", "cloud")
+    reg.add("blob.bin", 10.0)
+    dm = DataManager(str(tmp_path))
+    dm.attach_registry(reg)
+    dm.register_site("jet2")
+    dm.register_site("aws")
+    dm.put_bytes("jet2", "blob.bin", b"payload")
+    assert reg.locate("blob.bin") == ["jet2"]
+    dm.copy("jet2", "blob.bin", "aws", "blob.bin")
+    assert reg.locate("blob.bin") == ["aws", "jet2"]
+    dm.delete("jet2", "blob.bin")
+    assert reg.locate("blob.bin") == ["aws"]
+    dm.move("aws", "blob.bin", "shared", "blob.bin")
+    assert reg.locate("blob.bin") == ["shared"]
