@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging
+.PHONY: test test-fast lint cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging bench-sched bench-check
 
 test:  ## tier-1 verify (ROADMAP.md)
 	$(PY) -m pytest -x -q
@@ -39,3 +39,11 @@ bench-elastic:  ## exp7 only: elastic weak scaling + over-provisioning cost curv
 
 bench-staging:  ## exp8 only: data-aware staging, locality-aware vs blind placement
 	$(PY) -m benchmarks.exp8_staging --full
+
+bench-sched:  ## exp9 only: broker dispatch throughput, 100k tasks x 256 providers
+	$(PY) -m benchmarks.exp9_sched --full
+
+bench-check:  ## smoke run + dispatch-throughput regression gate vs committed baseline
+	git show HEAD:artifacts/bench/BENCH_smoke.json > /tmp/bench_baseline.json
+	$(PY) -m benchmarks.run --smoke
+	$(PY) -m benchmarks.check_bench /tmp/bench_baseline.json artifacts/bench/BENCH_smoke.json

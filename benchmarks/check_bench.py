@@ -1,0 +1,61 @@
+"""CI regression gate for the smoke dispatch-throughput metric.
+
+Compares a freshly produced ``BENCH_smoke.json`` against the committed
+baseline and FAILS (exit 1) when the exp9 smoke dispatch throughput
+regressed more than the tolerance (default 30%), so a PR that quietly
+re-introduces an O(tasks x providers) term into the scheduler core cannot
+merge green.  Improvements and small noise pass; the baseline is refreshed
+by committing a new BENCH_smoke.json.
+
+Usage (what .github/workflows/ci.yml runs):
+
+    cp artifacts/bench/BENCH_smoke.json /tmp/bench_baseline.json
+    PYTHONPATH=src python -m benchmarks.run --smoke
+    PYTHONPATH=src python -m benchmarks.check_bench \
+        /tmp/bench_baseline.json artifacts/bench/BENCH_smoke.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+ROW = "exp9_sched"
+METRIC = "dispatch_tasks_per_s"
+# overridable per environment (BENCH_GATE_TOLERANCE=0.5): the baseline is a
+# committed absolute number, so a much slower CI runner class may need a
+# wider gate until the baseline is re-committed from that class of machine
+DEFAULT_TOLERANCE = float(os.environ.get("BENCH_GATE_TOLERANCE", "0.30"))
+
+
+def metric_from(path: str) -> float:
+    with open(path) as f:
+        doc = json.load(f)
+    for row in doc.get("rows", []):
+        if row.get("name") == ROW:
+            m = re.search(rf"{METRIC}=([0-9.]+)", row.get("derived", ""))
+            if m:
+                return float(m.group(1))
+    raise SystemExit(f"{path}: no {ROW} row with a {METRIC} value")
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    baseline_path, fresh_path = argv[0], argv[1]
+    tolerance = float(argv[2]) if len(argv) > 2 else DEFAULT_TOLERANCE
+    baseline = metric_from(baseline_path)
+    fresh = metric_from(fresh_path)
+    floor = baseline * (1.0 - tolerance)
+    verdict = "OK" if fresh >= floor else "REGRESSION"
+    print(
+        f"{ROW}.{METRIC}: baseline={baseline:.0f} fresh={fresh:.0f} "
+        f"floor={floor:.0f} (tolerance {tolerance:.0%}) -> {verdict}"
+    )
+    return 0 if fresh >= floor else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -43,6 +43,17 @@ def _exp8_summary(rows: list[dict]) -> str:
     )
 
 
+def _exp9_summary(rows: list[dict]) -> str:
+    scaling = [r for r in rows if r["mode"] == "scaling"]
+    data = next(r for r in rows if r["mode"] == "data")
+    flat = scaling[-1]["us_per_task"] / max(scaling[0]["us_per_task"], 1e-9)
+    return (
+        f"exp9_sched,{scaling[-1]['us_per_task']},"
+        f"dispatch_tasks_per_s={data['dispatch_tasks_per_s']:.0f}"
+        f"_cost_flat_ratio={flat:.2f}"
+    )
+
+
 def _exp7_summary(rows: list[dict]) -> str:
     weak = [r for r in rows if r["mode"] == "weak"]
     elastic = [r for r in rows if r["mode"] == "elastic"]
@@ -81,13 +92,14 @@ def run_smoke() -> list[str]:
         exp6_streaming,
         exp7_elastic,
         exp8_staging,
+        exp9_sched,
     )
 
     print("== Exp 1 (smoke): per-provider scaling ==")
     out.append(_summary("exp1_per_provider", exp1_per_provider.main(False)))
 
     print("== Exp 4 (smoke): FACTS workflows ==")
-    r4 = exp4_facts.main(False)
+    r4 = exp4_facts.main(smoke=True)
     ovh_fracs = [r["ovh_frac"] for r in r4]
     out.append(
         f"exp4_facts,{sum(r['ttx_s'] for r in r4)/len(r4)*1e6:.0f},"
@@ -103,6 +115,9 @@ def run_smoke() -> list[str]:
     print("== Exp 8 (smoke): data-aware staging ==")
     out.append(_exp8_summary(exp8_staging.main(smoke=True)))
 
+    print("== Exp 9 (smoke): scheduler-core dispatch throughput ==")
+    out.append(_exp9_summary(exp9_sched.main(smoke=True)))
+
     path = _write_bench_json("smoke", out)
     print(f"\nwrote {path}")
     return out
@@ -113,7 +128,8 @@ def run_all(full: bool) -> list[str]:
 
     from benchmarks import exp1_per_provider, exp2_cross_provider, exp3a_cross_platform
     from benchmarks import exp3b_heterogeneous, exp4_facts, exp5_groups, exp6_streaming
-    from benchmarks import exp7_elastic, exp8_staging, kernels_bench, roofline_report
+    from benchmarks import exp7_elastic, exp8_staging, exp9_sched, kernels_bench
+    from benchmarks import roofline_report
 
     print("== Exp 1: per-provider scaling (OVH/TH/TPT, MCPP vs SCPP) ==")
     r1 = exp1_per_provider.main(full)
@@ -151,6 +167,9 @@ def run_all(full: bool) -> list[str]:
 
     print("== Exp 8: data-aware staging (locality-aware vs blind placement) ==")
     out.append(_exp8_summary(exp8_staging.main(full)))
+
+    print("== Exp 9: scheduler-core dispatch throughput (ledger + heaps) ==")
+    out.append(_exp9_summary(exp9_sched.main(full)))
 
     print("== Kernel micro-benchmarks ==")
     for name, us, derived in kernels_bench.main(full):

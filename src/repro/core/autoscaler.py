@@ -390,8 +390,10 @@ class Autoscaler:
         a task a new provider could run — the dispatcher parks first-time
         stage-ins outside the ready heap (so pending() never sees them), and
         ``stalled_in_backlog()`` subtracts the re-gated retries the backlog
-        scan still counts.  Without this, a data-heavy burst would buy
-        providers that sit idle until the transfers land."""
+        counter still holds.  Without this, a data-heavy burst would buy
+        providers that sit idle until the transfers land.  Every input here
+        is O(1) now (backlog/total/incoming are CapacityLedger counters), so
+        the tick costs the same at 10 providers or 256."""
         d = self.broker._dispatcher
         queued = d.pending() if d else 0
         stalled = d.stalled_in_backlog() if d else 0
@@ -515,7 +517,7 @@ class Autoscaler:
         self.trace.add(f"arrived:{spec.name}")
         if self.broker._dispatcher is not None:
             # new capacity: wake the dispatcher so backfill sees it NOW
-            self.broker._dispatcher._wake.set()
+            self.broker._dispatcher.notify_capacity()
 
     def note_provider_lost(self, name: str) -> None:
         """The broker blacklisted one of our instances (hard outage,

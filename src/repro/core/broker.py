@@ -27,13 +27,13 @@ from __future__ import annotations
 import os
 import tempfile
 import threading
-import time
 from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
 from typing import Optional
 
 from repro.core.dispatcher import StreamingDispatcher
-from repro.core.fault import StragglerWatchdog, clone_for_speculation
+from repro.core.fault import BreakerState, StragglerWatchdog, clone_for_speculation
 from repro.core.group import GroupExhausted, ProviderGroup
+from repro.core.ledger import CapacityLedger, LedgerDivergence
 from repro.core.managers.compute import CaaSManager, ProviderDown
 from repro.core.managers.data import DataManager
 from repro.core.managers.pilot import PilotManager
@@ -133,6 +133,20 @@ class Hydra:
         os.makedirs(self.workdir, exist_ok=True)
         self.proxy = ProviderProxy()
         self.policy: Policy = make_policy(policy)
+        self.policy.attach_proxy(self.proxy)  # O(1) eligibility index keying
+        # the O(1) capacity counter set (core/ledger.py): every supply/demand
+        # read the dispatcher and autoscaler make per tick used to be a scan
+        # over bind targets / live submissions; now it is a counter read,
+        # maintained by the events below (register/remove, breaker
+        # transitions, dispatch/completion load deltas, acquisitions, task
+        # entry/resolution).  HYDRA_LEDGER_CHECK=1 (tests/conftest.py) makes
+        # every read cross-check against a from-scratch recompute.
+        self.ledger = CapacityLedger(
+            strict=os.environ.get("HYDRA_LEDGER_CHECK", "") not in ("", "0")
+        )
+        self.ledger.attach(
+            recompute=self._ledger_recompute, on_capacity_gain=self._notify_capacity
+        )
         self.store = make_store(pod_store, self.workdir)
         self.partitioning = partitioning
         self.tasks_per_pod = tasks_per_pod
@@ -159,7 +173,10 @@ class Hydra:
         self._lock = threading.RLock()
         self._fault_lock = threading.RLock()  # serializes orphan collection/rebind
         self._claimed: set[str] = set()  # task uids currently being re-bound
-        self._dispatch = ThreadPoolExecutor(max_workers=8, thread_name_prefix="hydra-dispatch")
+        self._dispatch_workers = 8
+        self._dispatch = ThreadPoolExecutor(
+            max_workers=self._dispatch_workers, thread_name_prefix="hydra-dispatch"
+        )
         self._submissions: list[Submission] = []
         # elastic acquisition state (core/autoscaler.py): providers that have
         # been *requested* but are still inside their modeled startup/queue
@@ -167,7 +184,10 @@ class Hydra:
         # momentarily-unplaceable tasks nor under-sizes batches while
         # capacity is on its way.
         self._pending_acquisitions: dict[str, dict] = {}
-        self._backlog_cache: Optional[tuple] = None  # (real_time, count)
+        # metrics retired from pruned submissions (phase_totals): pruning
+        # bounds broker memory by LIVE work, this keeps the run totals
+        self._retired_phases: dict[str, float] = {}
+        self._retired = {"n_submissions": 0, "n_tasks": 0, "ovh_s": 0.0}
         self.autoscaler = None  # attached via autoscale()
         self.watchdog: Optional[StragglerWatchdog] = None
         if enable_straggler_mitigation:
@@ -206,40 +226,48 @@ class Hydra:
         """Free execution slots across healthy bind targets: the streaming
         dispatcher's backfill hint.  Group members report slots minus
         outstanding load; ungrouped providers report slots minus the
-        broker-tracked outstanding count (ProviderHandle.outstanding), so a
-        saturated provider genuinely reads as 0 free slots — which is what
-        lets the elastic throttle hold work back for capacity that is still
-        coming up instead of burying the busy provider's internal queue."""
-        total = 0
-        for target in self.proxy.bind_targets():
-            if isinstance(target, ProviderGroup):
-                total += target.idle_slots()
-            else:
-                slots = max(1, target.spec.concurrency * target.spec.n_nodes)
-                total += max(0, slots - target.outstanding)
-        return total
+        broker-tracked outstanding count, so a saturated provider genuinely
+        reads as 0 free slots — which is what lets the elastic throttle hold
+        work back for capacity that is still coming up instead of burying
+        the busy provider's internal queue.  An O(1) CapacityLedger read:
+        the per-call bind-target walk is gone (core/ledger.py)."""
+        return self.ledger.idle_slots()
 
     def _provider_load(self, name: str, delta: int) -> None:
-        """Outstanding-task accounting for ungrouped providers."""
+        """Outstanding-task accounting for ungrouped providers.  Serialized
+        per handle, not broker-wide: this runs twice per task from every
+        manager thread, and funneling it through self._lock was a measured
+        contention hot spot (§Perf exp9)."""
         try:
             handle = self.proxy.get(name)
         except KeyError:  # elastically deregistered: nothing to track
             return
-        with self._lock:
+        with handle.load_lock:
             handle.outstanding = max(0, handle.outstanding + delta)
+            grouped = handle.group is not None
+        if not grouped:
+            # grouped members account their load through the group's ledger
+            # events; a late completion from a pre-join dispatch must not
+            # double-touch the (re-based) member row
+            self.ledger.load_delta(name, delta)
 
     def total_slots(self) -> int:
         """Live execution slots across healthy bind targets (for groups:
-        breaker-available members only — a tripped member's slots are *gone*
-        from supply, which is exactly the signal that makes the autoscaler
-        replace broken capacity)."""
-        total = 0
-        for target in self.proxy.bind_targets():
-            if isinstance(target, ProviderGroup):
-                total += sum(m.slots for m in target.available_members())
-            else:
-                total += max(1, target.spec.concurrency * target.spec.n_nodes)
-        return total
+        members whose breaker is not OPEN — a tripped member's slots are
+        *gone* from supply, which is exactly the signal that makes the
+        autoscaler replace broken capacity).  O(1) ledger read."""
+        return self.ledger.total_slots()
+
+    def probe_slots(self) -> int:
+        """Time-aware capacity peek for the dispatcher's STALL path only.
+        A group member whose breaker reset window has elapsed is invisible
+        to the event-driven ledger until something dispatches to it —
+        ``allow()`` performs the OPEN -> HALF_OPEN transition, and allow()
+        only runs when a pod is routed.  If the elastic throttle trusted
+        the ledger alone, a fully-tripped fleet at pool max would never
+        receive the probe that recovers it (livelock).  O(members), called
+        only when the ledger reads zero idle supply."""
+        return sum(g.idle_slots() for g in self.proxy.groups())
 
     def backlog(self) -> int:
         """Unfinished tasks the brokered providers still owe (dispatched or
@@ -248,20 +276,61 @@ class Hydra:
         fast into manager-internal queues, so it under-reports sustained
         overload.
 
-        Called every autoscaler tick: the count runs on a SNAPSHOT of the
-        submission list (tstate reads are lock-free) and is cached for a
-        short real-time window, so a 10k-task scan never serializes against
-        the hot submit/dispatch paths under the broker lock."""
-        now_r = time.monotonic()
+        Called every autoscaler tick: an O(1) ledger counter — incremented
+        when a task first enters a submission, decremented when its future
+        resolves — replacing the per-tick scan of every live submission and
+        its 50 ms staleness cache."""
+        return self.ledger.backlog()
+
+    # ------------------------------------------------------------------
+    # CapacityLedger plumbing (core/ledger.py)
+    # ------------------------------------------------------------------
+    def _notify_capacity(self) -> None:
+        """Idle supply grew (completion / breaker close / arrival): wake the
+        dispatcher NOW instead of letting it poll out a real-time timeout."""
+        d = self._dispatcher
+        if d is not None:
+            d.notify_capacity()
+
+    def _on_task_resolved(self, _fut) -> None:
+        self.ledger.task_resolved()
+
+    def _ledger_recompute(self) -> dict:
+        """From-scratch ground truth for the strict cross-check: the same
+        counters the ledger maintains incrementally, rebuilt by scanning.
+        Runs WITHOUT the ledger lock (it takes broker/proxy/group locks)."""
+        idle = total = 0
+        for handle in self.proxy.all():
+            if handle.group is not None:
+                continue  # counted through its group's member row
+            if not handle.healthy:
+                continue
+            slots = max(1, handle.spec.concurrency * handle.spec.n_nodes)
+            total += slots
+            idle += max(0, slots - handle.outstanding)
+        for group in self.proxy.groups():
+            for row in group.stats():
+                if row["breaker"] == BreakerState.OPEN.value:
+                    continue
+                total += row["slots"]
+                idle += max(0, row["slots"] - row["outstanding"])
         with self._lock:
-            cached = self._backlog_cache
-            if cached is not None and now_r - cached[0] < 0.05:
-                return cached[1]
+            incoming = sum(p["slots"] for p in self._pending_acquisitions.values())
             subs = list(self._submissions)
-        n = sum(1 for sub in subs for t in sub.tasks if not t.final)
-        with self._lock:
-            self._backlog_cache = (now_r, n)
-        return n
+        backlog = len(
+            {
+                t.uid
+                for sub in subs
+                for t in sub.tasks
+                if t.in_submission and not t.done()
+            }
+        )
+        return {
+            "idle_slots": idle,
+            "total_slots": total,
+            "incoming_slots": incoming,
+            "backlog": backlog,
+        }
 
     def stream_stats(self) -> dict:
         """Dispatcher-side metrics + total pipeline rounds (exp6)."""
@@ -298,15 +367,17 @@ class Hydra:
 
     def begin_acquisition(self, spec: ProviderSpec, eta_s: float, group: Optional[str] = None):
         """Record a provider as in-flight (requested, not yet up)."""
+        slots = max(1, spec.concurrency * spec.n_nodes)
         with self._lock:
             self._pending_acquisitions[spec.name] = {
                 "platform": spec.platform,
-                "slots": max(1, spec.concurrency * spec.n_nodes),
+                "slots": slots,
                 "capacity": spec.capacity(),
                 "eta_s": eta_s,
                 "requested_at": now(),
                 "group": group,
             }
+            self.ledger.begin_incoming(spec.name, slots)
 
     def complete_acquisition(self, spec: ProviderSpec) -> Optional[ProviderHandle]:
         """The modeled acquisition latency elapsed: the provider is live.
@@ -318,6 +389,8 @@ class Hydra:
         the direct-binding pool."""
         with self._lock:
             info = self._pending_acquisitions.pop(spec.name, None)
+            if info is not None:
+                self.ledger.end_incoming(spec.name)
         if info is None:
             return None
         handle = self.register_provider(spec)
@@ -341,6 +414,7 @@ class Hydra:
             mgr = self._managers.pop(name, None)
         if mgr is not None:
             mgr.shutdown(wait=False)
+        self.ledger.remove(name)
         try:
             self.proxy.deregister(name)
         except KeyError:
@@ -349,14 +423,16 @@ class Hydra:
     def abort_acquisition(self, name: str) -> bool:
         """Drop a pending acquisition (scale-in decided before arrival)."""
         with self._lock:
-            return self._pending_acquisitions.pop(name, None) is not None
+            dropped = self._pending_acquisitions.pop(name, None) is not None
+            if dropped:
+                self.ledger.end_incoming(name)
+            return dropped
 
     def incoming_slots(self) -> int:
         """Execution slots currently inside their modeled acquisition
         latency: counted as supply by the dispatcher and the autoscaler so
-        sustained pressure does not over-acquire."""
-        with self._lock:
-            return sum(p["slots"] for p in self._pending_acquisitions.values())
+        sustained pressure does not over-acquire.  O(1) ledger read."""
+        return self.ledger.incoming_slots()
 
     def pending_acquisitions(self) -> list[dict]:
         with self._lock:
@@ -386,19 +462,47 @@ class Hydra:
         return stats
 
     def _prune_finished_submissions(self) -> None:
-        """Drop dispatcher-internal micro-batch submissions whose tasks have
-        all RESOLVED futures: a long-lived streaming broker must not retain
-        every batch (tasks + serialized pods + traces) forever.  Resolution,
-        not tstate-finality, is the gate — a retryable FAILED task is final
+        """Drop ANY submission whose tasks have all RESOLVED futures — after
+        extracting its metrics row into the retired totals — so a long-lived
+        broker's memory and every remaining full scan (orphan sweep, ledger
+        cross-check) are bounded by LIVE work, not run history.  Resolution,
+        not tstate-finality, is the gate: a retryable FAILED task is final
         by tstate but still owned by the orphan sweep (_collect_orphans),
-        which scans these submissions to re-bind it.  Caller-created
-        submissions (batch_id is None) are kept — the caller owns them."""
+        which scans these submissions to re-bind it.  Callers keep their own
+        Submission handles (wait()/metrics() are self-contained), so pruning
+        caller-created submissions is safe; run-level totals stay readable
+        through phase_totals()."""
+        retired: list[Submission] = []
         with self._lock:
-            self._submissions = [
-                s
-                for s in self._submissions
-                if s.batch_id is None or not all(t.done() for t in s.tasks)
-            ]
+            live = []
+            for s in self._submissions:
+                if all(t.done() for t in s.tasks):
+                    retired.append(s)
+                else:
+                    live.append(s)
+            self._submissions = live
+        for s in retired:
+            m = s.metrics()
+            with self._lock:
+                self._retired["n_submissions"] += 1
+                self._retired["n_tasks"] += len(s.tasks)
+                self._retired["ovh_s"] += m.ovh
+                for k, v in m.phases.items():
+                    self._retired_phases[k] = self._retired_phases.get(k, 0.0) + v
+
+    def phase_totals(self) -> dict[str, float]:
+        """Cumulative broker-side phase seconds (bind/partition/serialize/
+        submit) across ALL submissions this broker ever ran — pruned ones
+        contribute their retired totals, live ones are summed on the fly.
+        The exp4 OVH instrumentation reads this instead of walking
+        ``_submissions`` (which pruning now keeps bounded)."""
+        with self._lock:
+            totals = dict(self._retired_phases)
+            subs = list(self._submissions)
+        for s in subs:
+            for k, v in s.metrics().phases.items():
+                totals[k] = totals.get(k, 0.0) + v
+        return totals
 
     def _running_tasks(self) -> list[Task]:
         with self._lock:
@@ -424,6 +528,7 @@ class Hydra:
             )
         self.data.register_site(spec.name)
         self.staging.register_site(spec.name, platform=spec.platform)
+        self.ledger.upsert_direct(spec.name, max(1, spec.concurrency * spec.n_nodes))
         return handle
 
     def register_group(
@@ -459,6 +564,10 @@ class Hydra:
                 min_healthy=min_healthy,
             )
             self.proxy.register_group(group)
+            # capacity events flow through the group from here on: member
+            # ledger rows replace the members' direct rows, and breaker
+            # transitions invalidate the proxy's cached bind-target list
+            group.attach_runtime(self.ledger, self.proxy.bump_version)
             # a group is ONE staging site: members share a group-local store
             # (the way the paper's platforms share a filesystem), so member
             # churn inside the group never moves bytes
@@ -473,6 +582,7 @@ class Hydra:
                     mgr = self._managers.pop(member, None)
                 if mgr is not None:
                     mgr.shutdown(wait=False)
+                self.ledger.remove(member)
                 try:
                     self.proxy.deregister(member)
                 except KeyError:
@@ -488,7 +598,14 @@ class Hydra:
             mgr = self._managers.pop(name)
             handle = self.proxy.get(name)
             handle.healthy = False
+        with handle.load_lock:
             handle.outstanding = 0
+        if handle.group is None:
+            # grouped members leave supply via mark_down below (breaker trip
+            # -> ledger set_counted), keeping the ledger keyed on the same
+            # signal its cross-check recomputes from
+            self.ledger.deactivate(name)
+        self.proxy.bump_version()  # health flip: cached bind targets stale
         mgr.fail()  # reject anything in flight
         if drain:
             # graceful release: save any LAST-copy dataset to the shared
@@ -515,6 +632,7 @@ class Hydra:
         mgr.shutdown(wait=drain)
         if deregister:
             self.policy.forget(name)
+            self.ledger.remove(name)
             try:
                 self.proxy.deregister(name)
             except KeyError:
@@ -550,7 +668,7 @@ class Hydra:
         with self._lock:
             self._submissions.append(sub)
             self.n_submits += 1
-            prune_due = batch_id is not None and self.n_submits % 32 == 0
+            prune_due = self.n_submits % 32 == 0
         if prune_due:
             self._prune_finished_submissions()
         try:
@@ -630,14 +748,32 @@ class Hydra:
         # -- bulk submit (concurrently across providers) -----------------------
         rt.add("submit_start")
         sub.dispatch_started = True
-        for t in tasks:  # now visible to backlog() until the sub is pruned
-            t.in_submission = True
+        entered = []
+        for t in tasks:  # now visible to backlog() until resolution
+            if not t.in_submission:
+                t.in_submission = True
+                entered.append(t)
+        if entered:
+            # count BEFORE registering the resolution callbacks: a task that
+            # resolves instantly fires its callback inline, and the decrement
+            # must never precede the increment.  Only first entries register
+            # — a task re-entering through a later submission (rebind via the
+            # staging gate) must not earn a second decrement.
+            self.ledger.task_entered(len(entered))
+            for t in entered:
+                t.add_done_callback(self._on_task_resolved)
         per_provider: dict[str, list[Pod]] = {}
         for p in pods:
             per_provider.setdefault(p.provider, []).append(p)
+        # chunk the per-provider submissions over the dispatch workers: at
+        # 256 providers one executor round-trip per provider dominated the
+        # submit phase (§Perf exp9), and pod delivery inside a chunk is a
+        # loop, not a hop
+        items = list(per_provider.items())
+        n_chunks = max(1, min(len(items), self._dispatch_workers))
         futs = [
-            self._dispatch.submit(self._submit_to_provider, name, ppods)
-            for name, ppods in per_provider.items()
+            self._dispatch.submit(self._submit_chunk, items[i::n_chunks])
+            for i in range(n_chunks)
         ]
         futures_wait(futs)
         for f in futs:
@@ -646,6 +782,23 @@ class Hydra:
                 raise exc
         rt.add("submit_done")
         return sub
+
+    def _submit_chunk(self, items: list[tuple[str, list[Pod]]]) -> None:
+        """Deliver several providers' pods from one dispatch worker.  One
+        provider's failure must not starve the rest of the chunk: ProviderDown
+        is absorbed (the fault path already owns it, as before), the first
+        unexpected error is re-raised after the chunk completes."""
+        first_exc: Optional[BaseException] = None
+        for name, pods in items:
+            try:
+                self._submit_to_provider(name, pods)
+            except ProviderDown:
+                continue
+            except BaseException as e:
+                if first_exc is None:
+                    first_exc = e
+        if first_exc is not None:
+            raise first_exc
 
     def _submit_to_provider(self, name: str, pods: list[Pod]):
         if self.proxy.is_group(name):
@@ -820,10 +973,13 @@ class Hydra:
     def _handle_provider_down(self, name: str):
         with self._lock:
             handle = self.proxy.get(name)
-            handle.outstanding = 0  # a dead provider owes nothing dispatchable
             if handle.healthy:
                 handle.healthy = False
                 handle.trace.add("blacklisted")
+        with handle.load_lock:
+            handle.outstanding = 0  # a dead provider owes nothing dispatchable
+        self.ledger.deactivate(name)
+        self.proxy.bump_version()  # health flip: cached bind targets stale
         self.staging.site_down(name)
         self.data.deregister_site(name)
         if self.autoscaler is not None:
@@ -988,3 +1144,11 @@ class Hydra:
         self._dispatch.shutdown(wait=wait)
         self.staging.shutdown()
         self.store.cleanup()
+        if self.ledger.strict and self.ledger.divergences:
+            # a strict-mode divergence may have fired inside a loop that
+            # swallows exceptions (the dispatcher's lifeline handler):
+            # re-surface it here so the test suite cannot pass over it
+            raise LedgerDivergence(
+                f"capacity ledger diverged {self.ledger.divergences}x "
+                f"during this broker's lifetime: {self.ledger.last_divergence}"
+            )

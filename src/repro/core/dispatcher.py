@@ -80,6 +80,11 @@ class StreamingDispatcher:
         self._idle.set()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # staging-retry timers the dispatcher OWNS: stop() cancels them and
+        # resolves their tasks, so shutdown can never race a late requeue
+        # into a dead loop (and no task future is left dangling)
+        self._timer_lock = threading.Lock()
+        self._retry_timers: dict[object, Task] = {}
         # metrics: the streaming-vs-frontier story in benchmarks/exp6
         self.batches = 0
         self.tasks_dispatched = 0
@@ -100,9 +105,32 @@ class StreamingDispatcher:
     def stop(self, wait: bool = True) -> None:
         self._stop.set()
         self._wake.set()
+        # sweep the staging-retry timer registry: a timer that has not fired
+        # is cancelled and its task failed cleanly (an enqueue into a
+        # stopping loop would strand the future unresolved forever); a timer
+        # mid-fire re-checks _stop and fails its task itself
+        with self._timer_lock:
+            timers = list(self._retry_timers.items())
+            self._retry_timers.clear()
+        for timer, task in timers:
+            timer.cancel()
+            with self._lock:
+                self._blocked.pop(task.uid, None)
+            self._fail_task(
+                task,
+                StagingError(f"task {task.uid}: dispatcher stopped during staging retry"),
+            )
         if wait and self._thread is not None:
             self._thread.join(timeout=5.0)
         self.trace.add("dispatcher_stopped")
+
+    def notify_capacity(self) -> None:
+        """Idle supply grew (completion, breaker close, provider arrival —
+        the CapacityLedger's capacity-gain callback via the broker): wake
+        the loop now instead of letting a poll timeout expire.  This is what
+        removes the 20-50 ms real-time floor per saturated round that used
+        to dominate virtual-clock runs."""
+        self._wake.set()
 
     @property
     def running(self) -> bool:
@@ -154,7 +182,10 @@ class StreamingDispatcher:
                         # so the queue is not idle while any task is blocked
                         if not self._blocked:
                             self._idle.set()
-                self._wake.wait(timeout=0.05)
+                # enqueue always signals _wake, so this wait is purely
+                # event-driven; the timeout is a belt-and-braces valve, far
+                # off the hot path (it used to be a 50 ms poll)
+                self._wake.wait(timeout=0.5)
                 continue
             # open the micro-batch window: readiness events from other
             # workflows coalesce here (clock-aware: virtual windows are free)
@@ -170,11 +201,16 @@ class StreamingDispatcher:
                 if batch:
                     self._dispatch(batch)
                 elif self.pending():
-                    # saturated under the elastic throttle: provider arrival
-                    # sets _wake (Autoscaler._arrive) and wakes us instantly;
-                    # completions don't signal, so bound the wait in real time
+                    # saturated under the elastic throttle.  Every capacity
+                    # gain is an event now: completions and breaker closes
+                    # signal through the CapacityLedger (notify_capacity),
+                    # provider arrivals through Autoscaler._arrive.  Clear
+                    # first, THEN re-read idle supply (O(1) ledger): a gain
+                    # landing in the gap set _wake after our clear, so the
+                    # wait below returns immediately instead of losing it.
                     self._wake.clear()
-                    self._wake.wait(0.02)
+                    if self.broker.idle_slots() <= 0 and not self._stop.is_set():
+                        self._wake.wait(0.25)
             except Exception:
                 # the loop is the broker's lifeline: a raced completion or a
                 # recovery-path error must never kill the dispatcher thread.
@@ -194,6 +230,13 @@ class StreamingDispatcher:
         queue with everything up front."""
         if self.broker.autoscaler is not None:
             budget = min(self.max_batch, self.broker.idle_slots())
+            if budget <= 0:
+                # the ledger reads zero, but a breaker whose reset window
+                # elapsed is only *probeable* — it re-enters the counted
+                # supply when a dispatch triggers its OPEN -> HALF_OPEN
+                # transition.  Peek time-aware capacity (cold path) so a
+                # fully-tripped fleet at pool max still gets its probe.
+                budget = min(self.max_batch, self.broker.probe_slots())
             if budget <= 0:
                 return []
         else:
@@ -231,6 +274,13 @@ class StreamingDispatcher:
         staging = getattr(self.broker, "staging", None)
         if staging is None or not any(t.inputs for t in batch):
             return batch
+        with self.broker.policy.bulk_scope():
+            return self._stage_gate_scoped(batch, staging)
+
+    def _stage_gate_scoped(self, batch: list[Task], staging) -> list[Task]:
+        # inside policy.bulk_scope(): every gate bind in this pass shares one
+        # staging cost map per (inputs-signature, targets) — a batch of tasks
+        # reading the same shard set prices its placements once (§Perf exp9)
         ready: list[Task] = []
         targets = None
         for t in batch:
@@ -326,15 +376,45 @@ class StreamingDispatcher:
             )
             return
 
+        self._schedule_requeue(t)
+
+    def _schedule_requeue(self, t: Task, delay_s: float = 0.01) -> None:
+        """Re-gate ``t`` after a short REAL-time backoff, through a timer
+        the dispatcher owns: the registry entry is claimed exactly once —
+        by the firing timer or by stop()'s sweep — so a shutdown racing the
+        backoff either cancels the requeue cleanly (failing the task, whose
+        future must not dangle) or lets it land in a still-live loop."""
+
         def _requeue() -> None:
+            with self._timer_lock:
+                claimed = self._retry_timers.pop(timer, None)
+            if claimed is None:
+                return  # stop() swept this timer: it owns the task's fate
+            if self._stop.is_set():
+                with self._lock:
+                    self._blocked.pop(t.uid, None)
+                self._fail_task(
+                    t, StagingError(f"task {t.uid}: dispatcher stopped during staging retry")
+                )
+                return
             # enqueue BEFORE leaving _blocked (same idle-flash ordering as
-            # the success path above)
+            # the staging success path)
             self.enqueue([t])
             with self._lock:
                 self._blocked.pop(t.uid, None)
+            if self._stop.is_set() and not t.done():
+                # stop() raced past our registry claim (we popped ourselves
+                # before its sweep, then it set _stop): the loop may already
+                # have exited without popping this enqueue — resolve the
+                # future rather than strand it
+                self._fail_task(
+                    t, StagingError(f"task {t.uid}: dispatcher stopped during staging retry")
+                )
 
-        timer = threading.Timer(0.01, _requeue)
+        timer = threading.Timer(delay_s, _requeue)
         timer.daemon = True
+        with self._timer_lock:
+            self._retry_timers[timer] = t
         timer.start()
 
     def _release_reservation(self, t: Task) -> None:

@@ -72,6 +72,18 @@ class CircuitBreaker:
         self.trips = 0  # times the breaker opened (metrics)
         self._probe_inflight = False
         self._lock = threading.Lock()
+        # state-transition listener (core/group.py wires this to the
+        # broker's CapacityLedger): every transition — including the timed
+        # OPEN -> HALF_OPEN reopening, which happens inside allow(), never by
+        # mere passage of time — is thereby an O(1) capacity event.  Called
+        # under the breaker lock; listeners must not re-enter the breaker.
+        self.on_transition: Optional[Callable[[BreakerState, BreakerState], None]] = None
+
+    def _set_state(self, new: BreakerState) -> None:
+        # callers hold self._lock
+        old, self.state = self.state, new
+        if old != new and self.on_transition is not None:
+            self.on_transition(old, new)
 
     # -- gates -----------------------------------------------------------
     def allow(self) -> bool:
@@ -81,7 +93,7 @@ class CircuitBreaker:
                 return True
             if self.state == BreakerState.OPEN:
                 if self.opened_at is not None and now() - self.opened_at >= self.reset_timeout_s:
-                    self.state = BreakerState.HALF_OPEN
+                    self._set_state(BreakerState.HALF_OPEN)
                     self.half_open_successes = 0
                     self._probe_inflight = True
                     return True  # this caller is the probe
@@ -109,7 +121,7 @@ class CircuitBreaker:
                 self._probe_inflight = False
                 self.half_open_successes += 1
                 if self.half_open_successes >= self.success_threshold:
-                    self.state = BreakerState.CLOSED
+                    self._set_state(BreakerState.CLOSED)
 
     def record_failure(self) -> None:
         with self._lock:
@@ -137,7 +149,7 @@ class CircuitBreaker:
 
     def _reopen(self) -> None:
         # callers hold self._lock
-        self.state = BreakerState.OPEN
+        self._set_state(BreakerState.OPEN)
         self.opened_at = now()
         self.trips += 1
         self._probe_inflight = False

@@ -156,6 +156,11 @@ class ProviderGroup:
         self.trace = Trace()
         self._lock = threading.Lock()
         self._members: dict[str, GroupMember] = {}
+        # broker wiring (attach_runtime): the capacity ledger receives O(1)
+        # member events; on_topology_change invalidates the proxy's cached
+        # bind-target list on breaker transitions
+        self._ledger = None
+        self._on_topology_change = None
         # breaker config is remembered so members that JOIN a live group
         # (elastic scale-out, core/autoscaler.py) get identical protection
         self._failure_threshold = failure_threshold
@@ -188,6 +193,40 @@ class ProviderGroup:
                 reset_timeout_s=self._reset_timeout_s,
             ),
         )
+
+    # -- broker wiring (capacity ledger, core/ledger.py) -----------------
+    def attach_runtime(self, ledger, on_topology_change=None) -> None:
+        """Wire the broker's CapacityLedger (and the proxy's bind-target
+        cache invalidation) into this group's member events: dispatch/
+        completion load deltas, membership churn, and every breaker
+        transition become O(1) ledger updates, replacing the per-read
+        member scans the broker used to do."""
+        with self._lock:
+            self._ledger = ledger
+            self._on_topology_change = on_topology_change
+            members = list(self._members.values())
+        for m in members:
+            self._wire_member(m)
+
+    def _wire_member(self, m: GroupMember) -> None:
+        ledger = self._ledger
+        if ledger is not None:
+            ledger.upsert_member(
+                m.name, m.slots, counted=m.breaker.state != BreakerState.OPEN
+            )
+
+        def _on_transition(old, new, name=m.name):
+            if self._ledger is not None:
+                self._ledger.set_counted(name, new != BreakerState.OPEN)
+            cb = self._on_topology_change
+            if cb is not None:
+                cb()
+
+        m.breaker.on_transition = _on_transition
+
+    def _ledger_load(self, name: str, delta: int) -> None:
+        if self._ledger is not None:
+            self._ledger.load_delta(name, delta)
 
     # -- membership ------------------------------------------------------
     @property
@@ -252,6 +291,7 @@ class ProviderGroup:
             m = self._members[member]
             m.outstanding += n_tasks
             m.dispatched += n_tasks
+            self._ledger_load(member, n_tasks)
 
     # -- health feedback -------------------------------------------------
     def record_success(self, member: str) -> None:
@@ -261,6 +301,7 @@ class ProviderGroup:
         with self._lock:
             m.outstanding = max(0, m.outstanding - 1)
             m.completed += 1
+            self._ledger_load(member, -1)
         m.breaker.record_success()
 
     def record_failure(self, member: str) -> None:
@@ -273,6 +314,7 @@ class ProviderGroup:
         with self._lock:
             m.outstanding = max(0, m.outstanding - 1)
             m.failed += 1
+            self._ledger_load(member, -1)
         m.breaker.record_failure()
 
     def record_skip(self, member: str) -> None:
@@ -284,6 +326,7 @@ class ProviderGroup:
             return
         with self._lock:
             m.outstanding = max(0, m.outstanding - 1)
+            self._ledger_load(member, -1)
         m.breaker.release_probe()
 
     def record_straggler(self, member: str) -> None:
@@ -304,6 +347,8 @@ class ProviderGroup:
             # reassigned or failing, and a stale outstanding count would make
             # load-based strategies shun the member forever after recovery
             m.outstanding = 0
+            if self._ledger is not None:
+                self._ledger.load_reset(member)
         if was != BreakerState.OPEN:
             self.trace.add(f"breaker_open:{member}")
 
@@ -330,6 +375,7 @@ class ProviderGroup:
                 accels=max(have.accels, cap.accels),
                 memory_mb=max(have.memory_mb, cap.memory_mb),
             )
+        self._wire_member(member)  # converts its ledger row to a member row
         self.trace.add(f"member_joined:{handle.name}")
         return member
 
@@ -337,7 +383,9 @@ class ProviderGroup:
         """Permanently drop a member (elastic removal): it leaves rotation
         for good — no half-open probes to a provider that no longer exists."""
         with self._lock:
-            self._members.pop(name, None)
+            gone = self._members.pop(name, None) is not None
+        if gone and self._ledger is not None:
+            self._ledger.remove(name)
         self.trace.add(f"member_removed:{name}")
 
     def breaker_state(self, member: str) -> BreakerState:
@@ -354,6 +402,7 @@ class ProviderGroup:
                     "breaker": m.breaker.state.value,
                     "trips": m.breaker.trips,
                     "weight": m.weight,
+                    "slots": m.slots,
                     "outstanding": m.outstanding,
                     "dispatched": m.dispatched,
                     "completed": m.completed,

@@ -12,11 +12,34 @@ logical ``ProviderGroup``s (core/group.py) — both expose ``.name`` and
 bound to a group, the group resolves the concrete member at dispatch time;
 runtime feedback (``observe``) arrives keyed by the *logical* bound name, so
 a policy's load/EWMA accounting never sees intra-group member churn.
+
+Hot-path complexity (§Perf, the exp9 scheduler core):
+
+  * **Indexed eligibility** — when bound to the proxy's versioned bind-target
+    cache (``attach_proxy``), ``_eligible`` is a dict lookup per capacity
+    signature instead of a per-task scan; the index drops whole on any
+    topology change (register/deregister/health/breaker events bump the
+    proxy version).  Eligible sets built this way are ``EligibleTargets``
+    lists tagged with their (version, signature) key.
+  * **Lazy-rekeyed placement heaps** — the stateful policies
+    (``LoadAwarePolicy``/``AdaptivePolicy``/``DataGravityPolicy``) keep one
+    min-heap per eligible-set key, so ``_choose`` is O(log n) instead of
+    ``min()`` over every provider under the lock.  Heap entries are score
+    snapshots; every score change pushes a fresh entry (per-name version
+    numbers invalidate the old ones) and any remaining staleness — e.g. the
+    fleet-average EWMA prior drifting under a no-history provider — is
+    repaired at pop time by re-keying the top entry with its true score.
+  * **Batched data costs** — within one ``bind_bulk`` the gravity policy
+    resolves staging costs once per (inputs-signature, targets) via
+    ``StagingService.transfer_cost_many`` instead of per task per target.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import threading
 from collections import defaultdict
+from contextlib import contextmanager
 from typing import Optional
 
 from repro.core.task import Task
@@ -37,6 +60,18 @@ class NoEligibleProvider(RuntimeError):
         )
 
 
+class EligibleTargets(list):
+    """An eligibility-validated target list tagged with the (topology
+    version, capacity signature) it was computed for — the key stateful
+    policies hang their placement heaps on.  Treated as immutable."""
+
+    __slots__ = ("key",)
+
+    def __init__(self, items, key=None):
+        super().__init__(items)
+        self.key = key
+
+
 class Policy:
     name = "base"
     # data-aware placement (core/staging.py): when a StagingService is
@@ -45,8 +80,23 @@ class Policy:
     # become locality-aware; the rest stay locality-blind (the exp8 control).
     staging = None
 
+    def __init__(self):
+        self._proxy = None  # versioned bind-target source (attach_proxy)
+        self._elig_ver: Optional[int] = None
+        self._elig_cache: dict[tuple, EligibleTargets] = {}
+        self._elig_lock = threading.Lock()
+        # per-THREAD bulk data-cost scope: the dispatcher's staging-gate
+        # pass and a concurrent fault-path bind_bulk must not share (or
+        # clear) each other's batch cache
+        self._bulk_local = threading.local()
+
     def attach_staging(self, staging) -> None:
         self.staging = staging
+
+    def attach_proxy(self, proxy) -> None:
+        """Wire the ProviderProxy whose versioned bind-target cache keys the
+        eligibility index; without it every _eligible call scans."""
+        self._proxy = proxy
 
     def data_cost_s(self, task: Task, name: str) -> float:
         """Modeled seconds to materialize the task's missing input bytes at
@@ -54,6 +104,39 @@ class Policy:
         if self.staging is None or not task.inputs:
             return 0.0
         return self.staging.transfer_cost_s(task.inputs, name)
+
+    @contextmanager
+    def bulk_scope(self):
+        """Scope several sequential ``bind`` calls into one batch for the
+        data-cost cache (the dispatcher's staging gate binds input-carrying
+        tasks one by one — with this scope a gate pass over a batch reading
+        the same shard set prices its placements ONCE, exactly like
+        bind_bulk does).  The scope is thread-local: concurrent binders
+        each get their own."""
+        self._bulk_local.cache = {}
+        try:
+            yield
+        finally:
+            self._bulk_local.cache = None
+
+    def data_costs(self, task: Task, ok: list) -> dict[str, float]:
+        """Per-target stage-in cost for the task's inputs, resolved in ONE
+        staging query — and cached per (inputs-signature, targets) for the
+        duration of a bind_bulk, so a batch of tasks reading the same shard
+        set prices its placements once instead of tasks x targets times."""
+        if self.staging is None or not task.inputs:
+            return {}
+        sig = tuple(sorted(task.inputs))
+        names = tuple(p.name for p in ok)
+        cache = getattr(self._bulk_local, "cache", None)
+        if cache is not None:
+            hit = cache.get((sig, names))
+            if hit is not None:
+                return hit
+        costs = self.staging.transfer_cost_many(sig, names)
+        if cache is not None:
+            cache[(sig, names)] = costs
+        return costs
 
     def bind(self, task: Task, providers: list) -> str:
         """providers: bind targets — ProviderHandle or ProviderGroup."""
@@ -88,15 +171,22 @@ class Policy:
                 sig_cache[sig] = ok
             eligible.append(ok)
         names = []
-        for t, ok in zip(tasks, eligible):
-            reserved, t.reserved_provider = t.reserved_provider, None
-            if reserved is not None:
-                if any(p.name == reserved for p in ok):
-                    # load already accounted at reservation time: no _choose
-                    names.append(reserved)
-                    continue
-                self.unbind(t, reserved)  # target gone: release, re-choose
-            names.append(self._choose(t, ok))
+        fresh_scope = getattr(self._bulk_local, "cache", None) is None
+        if fresh_scope:
+            self._bulk_local.cache = {}
+        try:
+            for t, ok in zip(tasks, eligible):
+                reserved, t.reserved_provider = t.reserved_provider, None
+                if reserved is not None:
+                    if any(p.name == reserved for p in ok):
+                        # load already accounted at reservation time: no _choose
+                        names.append(reserved)
+                        continue
+                    self.unbind(t, reserved)  # target gone: release, re-choose
+                names.append(self._choose(t, ok))
+        finally:
+            if fresh_scope:
+                self._bulk_local.cache = None
         return names
 
     def observe(self, provider: str, runtime_s: float) -> None:
@@ -116,12 +206,41 @@ class Policy:
         name would inherit the dead instance's load/EWMA history."""
 
     def _eligible(self, task: Task, providers: list) -> list:
-        """Targets that can fit the task (a pin may name a group too)."""
+        """Targets that can fit the task (a pin may name a group too).
+
+        O(1) amortized when ``providers`` is the proxy's current cached
+        bind-target list: results are indexed per capacity signature and the
+        whole index drops on any topology-version bump.  Filtered lists
+        (rebind-with-exclude, speculation) fall back to the scan."""
         if task.pinned_provider:
             pin = [p for p in providers if p.name == task.pinned_provider]
             if pin:
                 return pin
-        ok = [p for p in providers if task.resources.fits(p.spec.capacity())]
+        res = task.resources
+        ver = self._proxy.targets_version(providers) if self._proxy is not None else None
+        if ver is None:
+            ok = [p for p in providers if res.fits(p.spec.capacity())]
+            if not ok:
+                raise NoEligibleProvider(task)
+            return ok
+        sig = (res.cpus, res.accels, res.memory_mb)
+        with self._elig_lock:
+            if ver != self._elig_ver:  # topology moved: the whole index is stale
+                self._elig_cache = {}
+                self._elig_ver = ver
+            ok = self._elig_cache.get(sig)
+        if ok is None:
+            ok = EligibleTargets(
+                (p for p in providers if res.fits(p.spec.capacity())),
+                key=(ver, sig),
+            )
+            with self._elig_lock:
+                # install only if the index still belongs to OUR version: a
+                # concurrent topology bump may have rotated the cache while
+                # we built, and a stale-era list must not survive into the
+                # new version's index
+                if self._elig_ver == ver:
+                    self._elig_cache[sig] = ok
         if not ok:
             raise NoEligibleProvider(task)
         return ok
@@ -131,6 +250,7 @@ class RoundRobinPolicy(Policy):
     name = "round_robin"
 
     def __init__(self):
+        super().__init__()
         self._n = 0
         self._lock = threading.Lock()
 
@@ -143,47 +263,162 @@ class RoundRobinPolicy(Policy):
 
 class CapabilityPolicy(Policy):
     """Pick the provider with the most spare capability for the task class:
-    accelerator tasks -> accel-richest pool; cpu tasks -> cpu-richest pool."""
+    accelerator tasks -> accel-richest pool; cpu tasks -> cpu-richest pool.
+    The argmax is cached per (eligible-set key, task class): capacities only
+    change with the topology version, which rotates the key."""
 
     name = "capability"
 
+    def __init__(self):
+        super().__init__()
+        self._best: dict[tuple, str] = {}
+
     def _choose(self, task: Task, ok: list) -> str:
-        if task.resources.accels > 0:
-            return max(ok, key=lambda p: p.spec.capacity().accels).name
-        return max(ok, key=lambda p: p.spec.capacity().cpus).name
+        accel = task.resources.accels > 0
+        key = getattr(ok, "key", None)
+        if key is not None:
+            hit = self._best.get((key, accel))
+            if hit is not None:
+                return hit
+        if accel:
+            name = max(ok, key=lambda p: p.spec.capacity().accels).name
+        else:
+            name = max(ok, key=lambda p: p.spec.capacity().cpus).name
+        if key is not None:
+            if len(self._best) > 1024:  # old topology versions: let them go
+                self._best = {}
+            self._best[(key, accel)] = name
+        return name
 
 
-class LoadAwarePolicy(Policy):
+class _HeapPolicy(Policy):
+    """Shared lazy-rekeyed-heap machinery for load/EWMA-scored policies.
+
+    One min-heap per eligible-set key (``EligibleTargets.key``).  Entries
+    are ``(score, seq, name, ver)`` snapshots; ``self._ver[name]`` advances
+    on every score change and every placement, invalidating older entries.
+    ``_rescore`` pushes a fresh entry into each heap whose eligible set
+    contains the name (the number of live heaps is the number of distinct
+    capacity signatures in flight — typically one).  A top entry whose
+    snapshot no longer equals the true score is re-keyed in place
+    (``heapreplace``) rather than trusted, which is what keeps prior-drift
+    staleness from mis-placing work.  All methods expect self._lock held."""
+
+    def __init__(self):
+        super().__init__()
+        self._lock = threading.Lock()
+        self._ver: dict[str, int] = defaultdict(int)
+        self._heaps: dict[tuple, list] = {}
+        self._heap_members: dict[tuple, frozenset] = {}
+        self._seq = itertools.count()
+
+    def _score(self, name: str) -> float:
+        raise NotImplementedError
+
+    def _rescore(self, name: str) -> None:
+        self._ver[name] += 1
+        if not self._heaps:
+            return
+        score, ver = self._score(name), self._ver[name]
+        for key, members in self._heap_members.items():
+            if name not in members:
+                continue
+            heap = self._heaps[key]
+            if len(heap) > 64 + 8 * len(members):
+                # a heap nobody pops (dormant capacity signature) would
+                # otherwise accumulate one stale snapshot per event forever:
+                # rebuild in place from current scores, bounding every heap
+                # at O(members)
+                heap[:] = [
+                    (self._score(m), next(self._seq), m, self._ver[m])
+                    for m in members
+                ]
+                heapq.heapify(heap)
+            else:
+                heapq.heappush(heap, (score, next(self._seq), name, ver))
+
+    def _drop(self, name: str) -> None:
+        """forget(): invalidate without re-seeding (the name is leaving)."""
+        self._ver[name] += 1
+
+    def _heap_for(self, ok: list) -> Optional[list]:
+        key = getattr(ok, "key", None)
+        if key is None:
+            return None
+        heap = self._heaps.get(key)
+        if heap is None:
+            stale = [k for k in self._heaps if k[0] != key[0]]
+            for k in stale:  # dead topology versions stop receiving pushes
+                del self._heaps[k]
+                del self._heap_members[k]
+            heap = [
+                (self._score(p.name), next(self._seq), p.name, self._ver[p.name])
+                for p in ok
+            ]
+            heapq.heapify(heap)
+            self._heaps[key] = heap
+            self._heap_members[key] = frozenset(p.name for p in ok)
+        return heap
+
+    def _pick_min(self, ok: list) -> str:
+        """Argmin-score target in O(log n) via the eligible set's heap;
+        falls back to a scan for untagged lists.  Callers hold self._lock
+        and still own the post-placement bookkeeping for the winner."""
+        heap = self._heap_for(ok)
+        if heap is not None:
+            while heap:
+                score, _, name, ver = heap[0]
+                if ver != self._ver[name]:
+                    heapq.heappop(heap)  # superseded snapshot
+                    continue
+                true = self._score(name)
+                if true != score:
+                    # lazy rekey: correct the snapshot in place and re-sort
+                    heapq.heapreplace(heap, (true, next(self._seq), name, ver))
+                    continue
+                return name
+            # heap drained (every member forgotten mid-flight): fall through
+        return min(ok, key=lambda p: self._score(p.name)).name
+
+
+class LoadAwarePolicy(_HeapPolicy):
     """Least-outstanding-tasks binding (queue-depth balancing)."""
 
     name = "load_aware"
 
     def __init__(self):
+        super().__init__()
         self.outstanding: dict[str, int] = defaultdict(int)
-        self._lock = threading.Lock()
+
+    def _score(self, name: str) -> float:
+        return self.outstanding[name]
 
     def _choose(self, task: Task, ok: list) -> str:
         with self._lock:
-            choice = min(ok, key=lambda p: self.outstanding[p.name])
-            self.outstanding[choice.name] += 1
-            return choice.name
+            name = self._pick_min(ok)
+            self.outstanding[name] += 1
+            self._rescore(name)
+            return name
 
     def observe(self, provider: str, runtime_s: float) -> None:
         with self._lock:
             self.outstanding[provider] = max(0, self.outstanding[provider] - 1)
+            self._rescore(provider)
 
     def unbind(self, task: Task, name: Optional[str] = None) -> None:
         name = name or task.group or task.provider
         if name:
             with self._lock:
                 self.outstanding[name] = max(0, self.outstanding[name] - 1)
+                self._rescore(name)
 
     def forget(self, name: str) -> None:
         with self._lock:
             self.outstanding.pop(name, None)
+            self._drop(name)
 
 
-class AdaptivePolicy(Policy):
+class AdaptivePolicy(_HeapPolicy):
     """Throughput-weighted binding (beyond-paper: the paper's future work).
 
     Keeps an EWMA of per-provider task service time and routes proportionally
@@ -193,19 +428,21 @@ class AdaptivePolicy(Policy):
     name = "adaptive"
 
     def __init__(self, alpha: float = 0.2):
+        super().__init__()
         self.alpha = alpha
         self.ewma: dict[str, float] = {}
         self.outstanding: dict[str, int] = defaultdict(int)
-        self._lock = threading.Lock()
+        self._ewma_sum = 0.0  # running aggregate: O(1) fleet prior
 
     def _fleet_prior(self) -> float:
         """Neutral EWMA prior for providers with no history yet (callers
         hold self._lock): a member that appeared mid-run (elastic scale-out)
         is assumed as fast as the current fleet average, not 1000x faster —
         an optimistic default would flood brand-new capacity before its
-        first completion."""
-        known = [v for v in self.ewma.values() if v > 0]
-        return (sum(known) / len(known)) if known else 1e-3
+        first completion.  Maintained as a running sum so reading it is O(1)
+        on the per-task path."""
+        n = len(self.ewma)
+        return (self._ewma_sum / n) if n else 1e-3
 
     def _expected_finish_s(self, name: str, prior: float) -> float:
         """Expected finish time ~ (queue + 1) x service time (callers hold
@@ -214,20 +451,24 @@ class AdaptivePolicy(Policy):
         svc = max(self.ewma.get(name, prior), 1e-6)
         return (self.outstanding[name] + 1) * svc
 
+    def _score(self, name: str) -> float:
+        return self._expected_finish_s(name, self._fleet_prior())
+
     def _choose(self, task: Task, ok: list) -> str:
         with self._lock:
-            prior = self._fleet_prior()
-            choice = min(ok, key=lambda p: self._expected_finish_s(p.name, prior))
-            self.outstanding[choice.name] += 1
-            return choice.name
+            name = self._pick_min(ok)
+            self.outstanding[name] += 1
+            self._rescore(name)
+            return name
 
     def observe(self, provider: str, runtime_s: float) -> None:
         with self._lock:
             cur = self.ewma.get(provider)
-            self.ewma[provider] = (
-                runtime_s if cur is None else (1 - self.alpha) * cur + self.alpha * runtime_s
-            )
+            new = runtime_s if cur is None else (1 - self.alpha) * cur + self.alpha * runtime_s
+            self.ewma[provider] = new
+            self._ewma_sum += new - (cur or 0.0)
             self.outstanding[provider] = max(0, self.outstanding[provider] - 1)
+            self._rescore(provider)
 
     def unbind(self, task: Task, name: Optional[str] = None) -> None:
         """Load release only — no EWMA update: the task never ran."""
@@ -235,11 +476,15 @@ class AdaptivePolicy(Policy):
         if name:
             with self._lock:
                 self.outstanding[name] = max(0, self.outstanding[name] - 1)
+                self._rescore(name)
 
     def forget(self, name: str) -> None:
         with self._lock:
-            self.ewma.pop(name, None)
+            gone = self.ewma.pop(name, None)
+            if gone is not None:
+                self._ewma_sum -= gone
             self.outstanding.pop(name, None)
+            self._drop(name)
 
 
 class DataGravityPolicy(AdaptivePolicy):
@@ -249,25 +494,33 @@ class DataGravityPolicy(AdaptivePolicy):
     + the adaptive queue/service-time estimate.  Placement therefore prefers
     providers already holding — or co-located with — a task's inputs, and
     only pays a cross-site transfer when the data-local queue is long enough
-    to make shipping bytes cheaper than waiting."""
+    to make shipping bytes cheaper than waiting.
+
+    Tasks without declared inputs have a zero data term everywhere and ride
+    the adaptive heap; tasks with inputs scan the (typically small) eligible
+    set against a data-cost map resolved once per (inputs-signature,
+    targets) per bind_bulk (``Policy.data_costs``)."""
 
     name = "data_gravity"
 
     def _choose(self, task: Task, ok: list) -> str:
+        if not task.inputs:
+            return super()._choose(task, ok)
         # staging reads (registry/engine locks) happen OUTSIDE the policy
         # lock: staging never calls back into policies, but keeping the
         # ordering one-way makes that invariant structural
-        data_cost = {p.name: self.data_cost_s(task, p.name) for p in ok}
+        data_cost = self.data_costs(task, ok)
         with self._lock:
             prior = self._fleet_prior()
             choice = min(
                 ok,
                 key=lambda p: (
-                    data_cost[p.name] + self._expected_finish_s(p.name, prior),
+                    data_cost.get(p.name, 0.0) + self._expected_finish_s(p.name, prior),
                     p.name,
                 ),
             )
             self.outstanding[choice.name] += 1
+            self._rescore(choice.name)
             return choice.name
 
 

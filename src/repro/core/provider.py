@@ -69,8 +69,12 @@ class ProviderHandle:
     group: Optional[str] = None
     # tasks dispatched to this (ungrouped) provider and not yet finished:
     # maintained by the broker, feeds the load-aware idle_slots() hint.
-    # Grouped members track load in their GroupMember instead.
+    # Grouped members track load in their GroupMember instead.  Guarded by
+    # its own per-handle lock: this counter moves twice per task (dispatch
+    # and completion, from hundreds of manager threads), and serializing it
+    # through the broker-wide lock was a measurable §Perf hot spot.
     outstanding: int = 0
+    load_lock: threading.Lock = field(default_factory=threading.Lock)
     trace: Trace = field(default_factory=Trace)
 
     @property
@@ -86,6 +90,30 @@ class ProviderProxy:
         self._providers: dict[str, ProviderHandle] = {}
         self._groups: dict[str, Any] = {}  # name -> ProviderGroup
         self._lock = threading.Lock()
+        # topology version: bumped on every change that can alter the
+        # bind-target set or its capacities (register/deregister, group
+        # membership, health flips, breaker transitions).  Keys the cached
+        # bind_targets() list and the policies' eligibility index
+        # (core/policy.py), making the per-dispatch "what can I bind to"
+        # question O(1) on an unchanged topology.
+        self._version = 0
+        self._targets_cache: Optional[tuple[int, list]] = None
+
+    def bump_version(self) -> None:
+        """Invalidate the cached bind-target list (health flips and breaker
+        transitions live outside the proxy, so their owners call this)."""
+        with self._lock:
+            self._bump()
+
+    def _bump(self) -> None:
+        # callers hold self._lock
+        self._version += 1
+        self._targets_cache = None
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version
 
     def register(self, spec: ProviderSpec) -> ProviderHandle:
         self._validate_credentials(spec)
@@ -96,11 +124,14 @@ class ProviderProxy:
             handle = ProviderHandle(spec=spec, devices=devices)
             handle.trace.add("validated")
             self._providers[spec.name] = handle
+            self._bump()
             return handle
 
     def deregister(self, name: str) -> ProviderHandle:
         with self._lock:
-            return self._providers.pop(name)
+            handle = self._providers.pop(name)
+            self._bump()
+            return handle
 
     def get(self, name: str) -> ProviderHandle:
         h = self._providers.get(name)
@@ -136,6 +167,7 @@ class ProviderProxy:
             for member in group.member_names:
                 self._providers[member].group = group.name
             self._groups[group.name] = group
+            self._bump()
 
     def attach_member(self, group_name: str, member_name: str) -> ProviderHandle:
         """Wire an already-registered provider into a live group (elastic
@@ -154,6 +186,7 @@ class ProviderProxy:
                     f"group {group_name!r}: member {member_name!r} already in group {h.group!r}"
                 )
             h.group = group_name
+            self._bump()
             return h
 
     def get_group(self, name: str):
@@ -172,13 +205,50 @@ class ProviderProxy:
     def bind_targets(self) -> list:
         """What binding policies may choose from: healthy *ungrouped*
         providers plus routable groups (grouped members are reached only
-        through their group)."""
+        through their group).
+
+        The list is CACHED per topology version and the cached object is
+        returned directly (callers treat it as read-only), so the dispatch
+        hot path pays O(1) instead of an O(providers) rebuild per batch —
+        and its identity keys the policies' eligibility index.  The cache
+        is skipped while any group is excluded for routability: a
+        non-routable group can become routable again purely by TIME (its
+        members' breaker reset windows elapsing), which no event signals.
+
+        Group routability is evaluated OUTSIDE the proxy lock: a member
+        breaker transition (under group/breaker locks) re-enters the proxy
+        via bump_version, so peeking group state under the proxy lock would
+        close a proxy -> group -> proxy lock cycle."""
         with self._lock:
+            cached = self._targets_cache
+            if cached is not None and cached[0] == self._version:
+                return cached[1]
+            ver = self._version
             targets: list = [
                 h for h in self._providers.values() if h.healthy and h.group is None
             ]
-            targets.extend(g for g in self._groups.values() if g.routable())
-            return targets
+            groups = list(self._groups.values())
+        excluded = False
+        for g in groups:
+            if g.routable():
+                targets.append(g)
+            else:
+                excluded = True
+        with self._lock:
+            if not excluded and self._version == ver:
+                self._targets_cache = (ver, targets)
+        return targets
+
+    def targets_version(self, targets) -> Optional[int]:
+        """The topology version ``targets`` was built at — iff it IS the
+        proxy's current cached bind-target list (identity check).  Any other
+        list (filtered rebind/speculation lists, test fixtures) returns None
+        and eligibility falls back to a scan."""
+        with self._lock:
+            cached = self._targets_cache
+            if cached is not None and cached[1] is targets and cached[0] == self._version:
+                return cached[0]
+            return None
 
     # ------------------------------------------------------------------
     @staticmethod

@@ -698,16 +698,27 @@ class StagingService:
         (replica reads are free; unknown datasets charge nothing — they are
         declared at the producer's completion, which gates dispatch anyway).
         Transfers ride separate links concurrently, so the cost of a set is
-        its slowest member, not the sum."""
-        worst = 0.0
-        for n in names:
-            if not self.registry.known(n):
-                continue
-            cost = self.engine.expected_transfer_s(n, site)
-            if cost == float("inf"):
-                continue  # lost dataset: surfaces at stage time, not bind time
-            worst = max(worst, cost)
-        return worst
+        its slowest member, not the sum.  One semantics, one implementation:
+        this is the single-site view of ``transfer_cost_many``."""
+        return self.transfer_cost_many(names, (site,))[site]
+
+    def transfer_cost_many(self, names: Iterable[str], sites: Iterable[str]) -> dict[str, float]:
+        """``transfer_cost_s`` for one input set across MANY candidate sites
+        in a single pass: the per-dataset source/size lookups are shared
+        across sites instead of re-resolved per (task, target), which is
+        what lets the gravity policy price a whole bind batch without
+        re-querying the registry per task (§Perf, exp9)."""
+        known = [n for n in names if self.registry.known(n)]
+        costs: dict[str, float] = {}
+        for site in sites:
+            worst = 0.0
+            for n in known:
+                cost = self.engine.expected_transfer_s(n, site)
+                if cost == float("inf"):
+                    continue  # lost dataset: surfaces at stage time, not bind time
+                worst = max(worst, cost)
+            costs[site] = worst
+        return costs
 
     def note_local(self, names: Iterable[str], site: str) -> None:
         """Every input already resident (the gate's fast path): count the

@@ -8,6 +8,11 @@ import warnings
 
 warnings.filterwarnings("ignore", category=DeprecationWarning)
 
+# run the WHOLE tier-1 suite with the CapacityLedger honesty harness on:
+# every O(1) counter read cross-checks against a from-scratch recompute and
+# raises LedgerDivergence on a persistent mismatch (core/ledger.py)
+os.environ.setdefault("HYDRA_LEDGER_CHECK", "1")
+
 
 def wait_until(pred, timeout=15.0, poll=0.02):
     """Poll a predicate in REAL time (thread progress, not clock time) —

@@ -59,14 +59,20 @@ def test_memory_store_serializes_without_files():
 
 
 def test_ovh_dominated_by_tasks_not_provider(tmp_path):
-    """Paper claim: OVH depends on #tasks/#pods, not on the provider."""
+    """Paper claim: OVH depends on #tasks/#pods, not on the provider.
+    Min-of-3 per provider: a single wall-clock OVH sample on a noisy shared
+    core can spike 3x+ from scheduler preemption alone (the same
+    robustness treatment test_system gives its OVH comparison)."""
     ovhs = {}
     for prov in ("a", "b"):
-        h = Hydra(pod_store="memory", workdir=str(tmp_path / prov))
-        h.register_provider(ProviderSpec(name=prov, concurrency=4))
-        sub = h.submit([Task(kind="noop") for _ in range(400)])
-        sub.wait(timeout=60)
-        ovhs[prov] = sub.metrics().ovh
-        h.shutdown(wait=False)
+        samples = []
+        for rep in range(3):
+            h = Hydra(pod_store="memory", workdir=str(tmp_path / f"{prov}{rep}"))
+            h.register_provider(ProviderSpec(name=prov, concurrency=4))
+            sub = h.submit([Task(kind="noop") for _ in range(400)])
+            sub.wait(timeout=60)
+            samples.append(sub.metrics().ovh)
+            h.shutdown(wait=False)
+        ovhs[prov] = min(samples)
     ratio = max(ovhs.values()) / max(min(ovhs.values()), 1e-9)
     assert ratio < 3.0  # same order of magnitude on a noisy shared core
