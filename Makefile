@@ -4,13 +4,13 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging bench-sched bench-check
+.PHONY: test test-fast lint cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging bench-sched bench-scenario bench-check
 
 test:  ## tier-1 verify (ROADMAP.md)
 	$(PY) -m pytest -x -q
 
-test-fast:  ## skip the slow end-to-end marks
-	$(PY) -m pytest -x -q -m "not slow"
+test-fast:  ## skip the slow/chaos end-to-end marks (the PR CI lane)
+	$(PY) -m pytest -x -q -m "not slow and not chaos"
 
 lint:  ## what the CI lint job runs (needs ruff: pip install ruff)
 	ruff check src tests benchmarks
@@ -42,6 +42,9 @@ bench-staging:  ## exp8 only: data-aware staging, locality-aware vs blind placem
 
 bench-sched:  ## exp9 only: broker dispatch throughput, 100k tasks x 256 providers
 	$(PY) -m benchmarks.exp9_sched --full
+
+bench-scenario:  ## exp10 only: at-scale chaos scenario + structured report
+	$(PY) -m benchmarks.exp10_scenario --report
 
 bench-check:  ## smoke run + dispatch-throughput regression gate vs committed baseline
 	git show HEAD:artifacts/bench/BENCH_smoke.json > /tmp/bench_baseline.json

@@ -1,11 +1,21 @@
-"""CI regression gate for the smoke dispatch-throughput metric.
+"""CI regression gates over the smoke benchmark summary.
 
 Compares a freshly produced ``BENCH_smoke.json`` against the committed
-baseline and FAILS (exit 1) when the exp9 smoke dispatch throughput
-regressed more than the tolerance (default 30%), so a PR that quietly
-re-introduces an O(tasks x providers) term into the scheduler core cannot
-merge green.  Improvements and small noise pass; the baseline is refreshed
-by committing a new BENCH_smoke.json.
+baseline and FAILS (exit 1) when a gated metric regressed past its
+tolerance, so a PR that quietly re-introduces an O(tasks x providers) term
+into the scheduler core — or a recovery path that inflates chaos makespans —
+cannot merge green.  Improvements and small noise pass; the baseline is
+refreshed by committing a new BENCH_smoke.json.
+
+Gates:
+
+  exp9_sched.dispatch_tasks_per_s   higher is better (throughput floor)
+  exp10_scenario.makespan_inflation lower is better (resilience ceiling)
+  exp10_scenario.failed             HARD: must be exactly 0 in the fresh run
+
+A gated row missing from the *baseline* is skipped (first PR that adds the
+experiment); missing from the *fresh* run it is an error (the experiment
+silently disappeared).
 
 Usage (what .github/workflows/ci.yml runs):
 
@@ -20,24 +30,80 @@ import json
 import os
 import re
 import sys
+from dataclasses import dataclass
+from typing import Optional
 
-ROW = "exp9_sched"
-METRIC = "dispatch_tasks_per_s"
-# overridable per environment (BENCH_GATE_TOLERANCE=0.5): the baseline is a
-# committed absolute number, so a much slower CI runner class may need a
+# overridable per environment (BENCH_GATE_TOLERANCE=0.5): baselines are
+# committed absolute numbers, so a much slower CI runner class may need a
 # wider gate until the baseline is re-committed from that class of machine
 DEFAULT_TOLERANCE = float(os.environ.get("BENCH_GATE_TOLERANCE", "0.30"))
 
 
-def metric_from(path: str) -> float:
+@dataclass(frozen=True)
+class Gate:
+    row: str
+    metric: str
+    higher_is_better: bool
+
+
+GATES = [
+    Gate(row="exp9_sched", metric="dispatch_tasks_per_s", higher_is_better=True),
+    Gate(row="exp10_scenario", metric="makespan_inflation", higher_is_better=False),
+]
+# hard invariants on the fresh run, independent of any baseline
+HARD_ZERO = [("exp10_scenario", "failed"), ("exp10_scenario", "violations")]
+
+
+def _rows(path: str) -> dict[str, str]:
     with open(path) as f:
         doc = json.load(f)
-    for row in doc.get("rows", []):
-        if row.get("name") == ROW:
-            m = re.search(rf"{METRIC}=([0-9.]+)", row.get("derived", ""))
-            if m:
-                return float(m.group(1))
-    raise SystemExit(f"{path}: no {ROW} row with a {METRIC} value")
+    return {row.get("name"): row.get("derived", "") for row in doc.get("rows", [])}
+
+
+def metric_value(rows: dict[str, str], row: str, metric: str) -> Optional[float]:
+    derived = rows.get(row)
+    if derived is None:
+        return None
+    m = re.search(rf"{metric}=([0-9.]+)", derived)
+    return float(m.group(1)) if m else None
+
+
+def check_gate(gate: Gate, baseline: dict, fresh: dict, tolerance: float) -> Optional[str]:
+    """None = pass/skip; a string = the failure message."""
+    new = metric_value(fresh, gate.row, gate.metric)
+    if new is None:
+        return f"{gate.row}.{gate.metric}: missing from the fresh run"
+    old = metric_value(baseline, gate.row, gate.metric)
+    if old is None:
+        print(f"{gate.row}.{gate.metric}: no baseline yet -> SKIPPED (fresh={new:g})")
+        return None
+    if gate.higher_is_better:
+        bound = old * (1.0 - tolerance)
+        ok = new >= bound
+        rel = "floor"
+    else:
+        bound = old * (1.0 + tolerance)
+        ok = new <= bound
+        rel = "ceiling"
+    verdict = "OK" if ok else "REGRESSION"
+    print(
+        f"{gate.row}.{gate.metric}: baseline={old:g} fresh={new:g} "
+        f"{rel}={bound:g} (tolerance {tolerance:.0%}) -> {verdict}"
+    )
+    return None if ok else f"{gate.row}.{gate.metric} regressed: {new:g} vs {rel} {bound:g}"
+
+
+def check_hard_zero(fresh: dict) -> list[str]:
+    failures = []
+    for row, metric in HARD_ZERO:
+        val = metric_value(fresh, row, metric)
+        if val is None:
+            failures.append(f"{row}.{metric}: missing from the fresh run")
+        elif val != 0:
+            failures.append(f"{row}.{metric} must be 0, got {val:g}")
+        else:
+            print(f"{row}.{metric}: 0 -> OK")
+    return failures
 
 
 def main(argv: list[str]) -> int:
@@ -46,15 +112,16 @@ def main(argv: list[str]) -> int:
         return 2
     baseline_path, fresh_path = argv[0], argv[1]
     tolerance = float(argv[2]) if len(argv) > 2 else DEFAULT_TOLERANCE
-    baseline = metric_from(baseline_path)
-    fresh = metric_from(fresh_path)
-    floor = baseline * (1.0 - tolerance)
-    verdict = "OK" if fresh >= floor else "REGRESSION"
-    print(
-        f"{ROW}.{METRIC}: baseline={baseline:.0f} fresh={fresh:.0f} "
-        f"floor={floor:.0f} (tolerance {tolerance:.0%}) -> {verdict}"
-    )
-    return 0 if fresh >= floor else 1
+    baseline, fresh = _rows(baseline_path), _rows(fresh_path)
+    failures = [
+        msg
+        for gate in GATES
+        if (msg := check_gate(gate, baseline, fresh, tolerance)) is not None
+    ]
+    failures += check_hard_zero(fresh)
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,97 @@
+"""Experiment 10: standing chaos scenarios — resilience as a measured,
+gated quantity.
+
+Runs a canonical sea-rise scenario (repro/scenarios) twice — once with the
+chaos schedule armed, once as the no-chaos twin — on a VirtualClock, and
+reports the resilience envelope:
+
+  makespan_inflation   chaos makespan / twin makespan (the price of the
+                       fault sequence after recovery; gated by check_bench)
+  recovery_s           last recovered task's finish minus the first fault
+  failed               failed tasks under chaos (MUST be 0; hard-gated)
+  recovered/preempted  tasks that rode a fault-recovery path / were killed
+
+``--smoke`` (the CI lane) uses ``searise_smoke``; the default and ``--full``
+use ``searise_at_scale`` / ``searise_full``.  ``--report`` additionally
+writes each run's full structured ScenarioReport JSON under
+``artifacts/scenario/`` — the nightly workflow uploads that directory as
+the scenario-report artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.scenarios import presets
+from repro.scenarios.runner import check_invariants, makespan_inflation, run_scenario
+
+from benchmarks.common import print_rows, write_csv
+
+SCENARIO_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "scenario")
+
+
+def _write_report(report) -> str:
+    os.makedirs(SCENARIO_DIR, exist_ok=True)
+    arm = "chaos" if report.chaos_enabled else "baseline"
+    path = os.path.join(SCENARIO_DIR, f"REPORT_{report.name}_{arm}.json")
+    with open(path, "w") as f:
+        json.dump(report.to_dict(), f, indent=2, sort_keys=True)
+    return path
+
+
+def run(spec, report_files: bool = False, verbose: bool = True) -> list[dict]:
+    t0 = time.time()
+    chaos = run_scenario(spec, chaos=True)
+    base = run_scenario(spec, chaos=False)
+    wall_s = time.time() - t0
+    violations = check_invariants(chaos, base, spec)
+    row = {
+        "scenario": spec.name,
+        "seed": spec.seed,
+        "n_tasks": chaos.n_tasks,
+        "n_workflows": chaos.n_workflows,
+        "failed": chaos.failed_tasks,
+        "unresolved": chaos.unresolved_tasks,
+        "makespan_chaos_s": round(chaos.makespan_s, 3),
+        "makespan_base_s": round(base.makespan_s, 3),
+        "makespan_inflation": round(makespan_inflation(chaos, base), 4),
+        "recovery_s": round(chaos.recovery_s or 0.0, 3),
+        "recovered_tasks": chaos.recovered_tasks,
+        "preempted_tasks": chaos.preempted_tasks,
+        "events_injected": sum(
+            chaos.chaos_stats.get("injected", {}).values()
+        ),
+        "mirrored_mb": chaos.staging.get("mirrored_mb", 0.0),
+        "violations": len(violations),
+        "fingerprint": chaos.fingerprint(),
+        "wall_s": round(wall_s, 2),
+    }
+    if report_files:
+        for rep in (chaos, base):
+            _write_report(rep)
+    rows = [row]
+    write_csv("exp10_scenario", rows)
+    if verbose:
+        print_rows(rows)
+        for v in violations:
+            print(f"  VIOLATION: {v}")
+    return rows
+
+
+def main(full: bool = False, smoke: bool = False, report: bool = False):
+    if smoke:
+        return run(presets.searise_smoke(), report_files=report)
+    if full:
+        return run(presets.searise_full(), report_files=report)
+    return run(presets.searise_at_scale(), report_files=report)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(
+        full="--full" in sys.argv,
+        smoke="--smoke" in sys.argv,
+        report="--report" in sys.argv,
+    )

@@ -54,6 +54,17 @@ def _exp9_summary(rows: list[dict]) -> str:
     )
 
 
+def _exp10_summary(rows: list[dict]) -> str:
+    r = rows[0]
+    return (
+        f"exp10_scenario,{r['n_tasks']},"
+        f"makespan_inflation={r['makespan_inflation']:.4f}"
+        f"_recovery_s={r['recovery_s']:.1f}"
+        f"_failed={r['failed']}"
+        f"_violations={r['violations']}"
+    )
+
+
 def _exp7_summary(rows: list[dict]) -> str:
     weak = [r for r in rows if r["mode"] == "weak"]
     elastic = [r for r in rows if r["mode"] == "elastic"]
@@ -93,6 +104,7 @@ def run_smoke() -> list[str]:
         exp7_elastic,
         exp8_staging,
         exp9_sched,
+        exp10_scenario,
     )
 
     print("== Exp 1 (smoke): per-provider scaling ==")
@@ -118,6 +130,9 @@ def run_smoke() -> list[str]:
     print("== Exp 9 (smoke): scheduler-core dispatch throughput ==")
     out.append(_exp9_summary(exp9_sched.main(smoke=True)))
 
+    print("== Exp 10 (smoke): chaos scenario (searise-smoke, chaos + twin) ==")
+    out.append(_exp10_summary(exp10_scenario.main(smoke=True)))
+
     path = _write_bench_json("smoke", out)
     print(f"\nwrote {path}")
     return out
@@ -128,8 +143,8 @@ def run_all(full: bool) -> list[str]:
 
     from benchmarks import exp1_per_provider, exp2_cross_provider, exp3a_cross_platform
     from benchmarks import exp3b_heterogeneous, exp4_facts, exp5_groups, exp6_streaming
-    from benchmarks import exp7_elastic, exp8_staging, exp9_sched, kernels_bench
-    from benchmarks import roofline_report
+    from benchmarks import exp7_elastic, exp8_staging, exp9_sched, exp10_scenario
+    from benchmarks import kernels_bench, roofline_report
 
     print("== Exp 1: per-provider scaling (OVH/TH/TPT, MCPP vs SCPP) ==")
     r1 = exp1_per_provider.main(full)
@@ -170,6 +185,9 @@ def run_all(full: bool) -> list[str]:
 
     print("== Exp 9: scheduler-core dispatch throughput (ledger + heaps) ==")
     out.append(_exp9_summary(exp9_sched.main(full)))
+
+    print("== Exp 10: chaos scenario (searise, chaos + no-chaos twin) ==")
+    out.append(_exp10_summary(exp10_scenario.main(full)))
 
     print("== Kernel micro-benchmarks ==")
     for name, us, derived in kernels_bench.main(full):

@@ -8,9 +8,17 @@ from repro.core.autoscaler import (
     hpc_queue_wait,
 )
 from repro.core.broker import Hydra, Submission
+from repro.core.chaos import (
+    ChaosEngine,
+    LinkWindow,
+    PreemptKill,
+    QuarantineStorm,
+    SiteOutage,
+)
 from repro.core.dispatcher import StreamingDispatcher
 from repro.core.fault import BreakerState, CircuitBreaker
 from repro.core.group import GroupExhausted, GroupMember, ProviderGroup
+from repro.core.managers.compute import Preempted, ProviderDown
 from repro.core.managers.workflow import Workflow, WorkflowManager
 from repro.core.policy import NoEligibleProvider
 from repro.core.provider import ProviderProxy, ProviderSpec
@@ -27,7 +35,14 @@ from repro.core.task import Resources, Task, TaskState
 __all__ = [
     "Autoscaler",
     "BreakerState",
+    "ChaosEngine",
     "CircuitBreaker",
+    "LinkWindow",
+    "PreemptKill",
+    "Preempted",
+    "ProviderDown",
+    "QuarantineStorm",
+    "SiteOutage",
     "LatencyModel",
     "LaunchSpec",
     "ProviderPool",

@@ -229,6 +229,28 @@ class ProviderPool:
         with self._lock:
             self._forget(launch, name)
 
+    # -- quarantine controls (chaos injection / operator override) -------
+    def force_quarantine(self, template: str) -> None:
+        """Declare a template's arrivals doomed (provisioning-API outage):
+        push its consecutive-failure counter straight to the quarantine
+        gate, so the scale-out loop stops buying it.  A later successful
+        arrival (note_live) or an explicit rehabilitate() re-opens it."""
+        with self._lock:
+            self._states[template].failures = self.MAX_CONSECUTIVE_FAILURES
+
+    def rehabilitate(self, template: str) -> None:
+        """Lift a quarantine (the provisioning outage window closed)."""
+        with self._lock:
+            self._states[template].failures = 0
+
+    def quarantined(self) -> list[str]:
+        with self._lock:
+            return sorted(
+                name
+                for name, st in self._states.items()
+                if st.failures >= self.MAX_CONSECUTIVE_FAILURES
+            )
+
     def _forget(self, launch: LaunchSpec, name: str) -> None:
         # callers hold self._lock
         st = self._states[launch.template.name]

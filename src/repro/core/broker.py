@@ -128,6 +128,7 @@ class Hydra:
         site_capacity_mb: Optional[float] = None,
         staging_links: Optional[dict[tuple[str, str], LinkModel]] = None,
         staging_max_per_link: int = 2,
+        staging_mirror_outputs: bool = False,
     ):
         self.workdir = workdir or tempfile.mkdtemp(prefix="hydra_")
         os.makedirs(self.workdir, exist_ok=True)
@@ -166,6 +167,7 @@ class Hydra:
             default_capacity_mb=site_capacity_mb,
             links=staging_links,
             max_per_link=staging_max_per_link,
+            mirror_outputs=staging_mirror_outputs,
         )
         self.data.attach_registry(self.staging.registry)
         self.policy.attach_staging(self.staging)

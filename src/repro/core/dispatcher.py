@@ -295,6 +295,7 @@ class StreamingDispatcher:
                 # the reservation and re-bind, instead of letting bind_bulk
                 # silently re-choose a site the inputs never reached
                 self._release_reservation(t)
+                t.trace.add(f"regate:{name}")
                 name = None
             if name is None:
                 if not targets:

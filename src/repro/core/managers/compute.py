@@ -28,6 +28,15 @@ class ProviderDown(RuntimeError):
     pass
 
 
+class Preempted(RuntimeError):
+    """A task was killed mid-execution by an external actor (spot reclaim,
+    HPC walltime kill, chaos injection).  The killer calls
+    ``task.mark_failed(Preempted(...))`` on a RUNNING task; the executing
+    manager notices the FAILED state when the work function returns and
+    reports the failure exactly once through the normal completion hook, so
+    the broker's retry machinery owns the recovery."""
+
+
 class CompiledArtifactCache:
     """Content-addressed cache of compiled step functions (the "image registry")."""
 
@@ -225,6 +234,16 @@ class CaaSManager:
                     self.failed += 1
                 if self.on_task_done:
                     self.on_task_done(task, self.handle.name, failed=True)
+            return
+        if task.tstate == TaskState.FAILED:
+            # preempt-style kill landed while _execute was running (see
+            # Preempted): report the failure exactly once so the broker
+            # retries it — the success path below would swallow it,
+            # stranding the task's future forever
+            with self._lock:
+                self.failed += 1
+            if self.on_task_done:
+                self.on_task_done(task, self.handle.name, failed=True)
             return
         # skip on duplicate completions (speculation / post-rebind finishes):
         # mark_done no-ops those, and the hook must not re-register outputs

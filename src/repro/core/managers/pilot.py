@@ -147,6 +147,13 @@ class PilotManager:
                 if self.on_task_done:
                     self.on_task_done(task, self.handle.name, failed=True)
             return
+        if task.tstate == TaskState.FAILED:
+            # preempt-style kill mid-execution: see CaaSManager._run_task
+            with self._stats_lock:
+                self.failed += 1
+            if self.on_task_done:
+                self.on_task_done(task, self.handle.name, failed=True)
+            return
         # duplicate completions skip the hook: see CaaSManager._run_task
         if self.on_task_finishing and not task.final:
             self.on_task_finishing(task, self.handle.name)

@@ -599,6 +599,48 @@ class TransferEngine:
                 cb(False)
         return lost
 
+    def link_override(self, key: tuple[str, str], model: LinkModel) -> LinkModel:
+        """Swap the LinkModel for one directed platform pair (chaos windows:
+        degradation / partition).  Returns the model previously in effect so
+        the caller can restore it when the window closes."""
+        with self._lock:
+            prev = self.links.get(key, FALLBACK_LINK)
+            self.links[key] = model
+            return prev
+
+    def resample_link(self, key: tuple[str, str]) -> int:
+        """Re-plan every ACTIVE transfer riding the platform pair ``key``:
+        cancel its completion deadline and restart it so the duration is
+        re-sampled under the CURRENT link model.  Like a site_down re-route,
+        a restart is from scratch (partial progress is not resumable across
+        a link renegotiation) and queues anew for its link slot.  The epoch
+        bump in _start invalidates any stale completion timer that already
+        fired and is waiting on the lock.  Returns the restart count."""
+        with self._lock:
+            affected = []
+            for trs in list(self._active.values()):
+                for tr in trs:
+                    try:
+                        k = (
+                            self.registry.platform_of(tr.src),
+                            self.registry.platform_of(tr.dst),
+                        )
+                    except UnknownSite:
+                        continue  # endpoint died concurrently: site_down owns it
+                    if k == key:
+                        affected.append(tr)
+            for tr in affected:
+                if tr.call is not None:
+                    tr.call.cancel()
+                active = self._active.get(tr.link, [])
+                if tr in active:
+                    active.remove(tr)
+                tr.state = QUEUED
+                tr.queued_at = get_clock().now()
+                self.trace.add(f"resample:{tr.dataset}:{tr.src}->{tr.dst}")
+                self._enqueue(tr)
+            return len(affected)
+
     def active_transfers(self) -> int:
         with self._lock:
             return sum(len(v) for v in self._active.values())
@@ -648,16 +690,24 @@ class StagingService:
         default_capacity_mb: Optional[float] = None,
         links: Optional[dict[tuple[str, str], LinkModel]] = None,
         max_per_link: int = 2,
+        mirror_outputs: bool = False,
     ):
         self.registry = DatasetRegistry(default_capacity_mb=default_capacity_mb)
         self.engine = TransferEngine(
             self.registry, seed=seed, links=links, max_per_link=max_per_link
         )
+        # write-through stage-out: every declared output also lands a replica
+        # in the shared object store, so a later WHOLE-SITE outage (chaos)
+        # cannot take an intermediate dataset's last copy with it.  Like the
+        # drain path's evacuate(), the copy is not time-modeled; the bytes
+        # are reported separately (``mirrored_mb``).
+        self.mirror_outputs = mirror_outputs
         self._lock = threading.Lock()
         self.stage_ins = 0
         self.stage_outs = 0
         self.stage_out_drops = 0  # outputs that could not fit their site
         self.evacuated_mb = 0.0  # last-copy bytes saved by graceful drains
+        self.mirrored_mb = 0.0  # write-through stage-out copies (chaos durability)
         self.transfer_wait_s = 0.0  # total task-observed stage-in wait
 
     # -- site lifecycle ------------------------------------------------
@@ -789,6 +839,14 @@ class StagingService:
                 with self._lock:
                     self.stage_out_drops += 1
                 self.registry.place_replica(name, SHARED_SITE)
+            if self.mirror_outputs and not self.registry.resident(name, SHARED_SITE):
+                try:
+                    self.registry.place_replica(name, SHARED_SITE)
+                except StagingError:
+                    pass  # shared store full of pinned data: best-effort
+                else:
+                    with self._lock:
+                        self.mirrored_mb += self.registry.get(name).size_mb
             with self._lock:
                 self.stage_outs += 1
         if task.outputs:
@@ -803,7 +861,7 @@ class StagingService:
         with self._lock:
             wait = self.transfer_wait_s
             outs, drops = self.stage_outs, self.stage_out_drops
-            evac = self.evacuated_mb
+            evac, mirrored = self.evacuated_mb, self.mirrored_mb
         return {
             "mb_moved": round(e.mb_moved, 3),
             "transfers": e.completed,
@@ -820,6 +878,7 @@ class StagingService:
             "stage_outs": outs,
             "stage_out_drops": drops,
             "evacuated_mb": round(evac, 3),
+            "mirrored_mb": round(mirrored, 3),
         }
 
     def shutdown(self) -> None:

@@ -175,7 +175,11 @@ class VirtualClock(Clock):
     def pending_deadlines(self) -> int:
         with self._cond:
             self._purge_cancelled()
-            return len(self._sleepers) + len(self._timers)
+            # cancelled timers below the heap head are lazily deleted and
+            # will never fire: they are not *pending* (scenario residue
+            # checks read this after shutdown)
+            live = sum(1 for _, _, call in self._timers if call.active)
+            return len(self._sleepers) + live
 
     # -- delayed callbacks -------------------------------------------------
     def call_later(self, delay: float, fn: Callable[[], None]) -> ScheduledCall:

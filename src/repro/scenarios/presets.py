@@ -1,0 +1,151 @@
+"""Canonical scenario specs.
+
+``searise_at_scale`` is the acceptance scenario from the ISSUE: a ≥1k-member
+FACTS sea-rise ensemble mixed with training and serving traffic on a
+cloud+HPC fleet with an elastic burst pool, hit mid-run by four correlated
+fault events — a whole-site outage, a provisioning quarantine storm, a
+cloud<->HPC link partition, and a preempt-kill wave.  ``searise_smoke`` is
+the same story at unit-test scale; ``searise_full`` is the nightly shape.
+
+All runtimes are modeled (sleep tasks), all footprints are real (FACTS
+stage sizes, checkpoint/corpus/snapshot bytes), so any scale runs in real
+seconds under VirtualClock."""
+from __future__ import annotations
+
+from repro.scenarios.spec import (
+    ChaosDecl,
+    ElasticDecl,
+    ProviderDecl,
+    ScenarioSpec,
+    TrafficSpec,
+)
+
+
+def _fleet(
+    concurrency: int, burst_max: int, burst_latency_s: float, burst_min: int = 0
+):
+    providers = [
+        ProviderDecl(name="jet2", platform="cloud", concurrency=concurrency),
+        ProviderDecl(name="chi", platform="cloud", concurrency=concurrency),
+        ProviderDecl(name="aws", platform="cloud", concurrency=concurrency),
+        ProviderDecl(
+            name="bridges2",
+            platform="hpc",
+            connector="pilot",
+            concurrency=concurrency,
+        ),
+    ]
+    elastic = [
+        ElasticDecl(
+            template="burst",
+            platform="cloud",
+            concurrency=concurrency,
+            min_instances=burst_min,
+            max_instances=burst_max,
+            latency_s=burst_latency_s,
+        )
+    ]
+    return providers, elastic
+
+
+def searise_smoke(seed: int = 0) -> ScenarioSpec:
+    """Unit-test / bench-smoke scale: same fleet + event shapes, ~200 task-s."""
+    providers, elastic = _fleet(concurrency=4, burst_max=2, burst_latency_s=8.0)
+    return ScenarioSpec(
+        name="searise-smoke",
+        seed=seed,
+        providers=providers,
+        elastic=elastic,
+        traffic=TrafficSpec(
+            facts_members=24,
+            train_jobs=2,
+            train_blocks=3,
+            train_block_s=6.0,
+            serve_waves=2,
+            serve_tasks_per_wave=8,
+            serve_task_s=0.5,
+        ),
+        # events land AFTER the cold-staging ramp (~20 virtual s: every
+        # member's first task waits on the 2 GB forcing pull) so they hit
+        # running tasks and in-flight transfers, not an idle fleet
+        chaos=[
+            ChaosDecl(kind="site_outage", at_s=25.0, site="jet2"),
+            ChaosDecl(kind="quarantine_storm", at_s=26.0, template="burst", duration_s=15.0),
+            ChaosDecl(
+                kind="link_window",
+                at_s=28.0,
+                duration_s=8.0,
+                src_platform="cloud",
+                dst_platform="hpc",
+                factor=0.0,  # partition
+            ),
+            ChaosDecl(kind="preempt_kill", at_s=32.0, count=4),
+        ],
+        # a permanent 1-of-4 site loss is a 25% capacity cut at this tiny
+        # scale; the ISSUE's 1.5x bound is defined on searise_at_scale,
+        # where the staging-bound ensemble absorbs it
+        max_makespan_inflation=2.0,
+    )
+
+
+def searise_at_scale(seed: int = 0) -> ScenarioSpec:
+    """The ISSUE's acceptance scenario: 1024 FACTS members + train/serve
+    traffic, four correlated fault events including a whole-site outage and
+    a cloud<->HPC partition, zero failed tasks, inflation <= 1.5x."""
+    # burst_min keeps a warm elastic floor: tasks parked on stage-in are
+    # (correctly) not autoscaler demand, so during the partition the pool
+    # would otherwise drain idle burst instances and the post-fault herd
+    # would wait out a re-acquisition ramp — a timing-dependent tail that
+    # makes the chaos makespan bimodal under load
+    providers, elastic = _fleet(
+        concurrency=8, burst_max=4, burst_latency_s=15.0, burst_min=2
+    )
+    return ScenarioSpec(
+        name="searise-at-scale",
+        seed=seed,
+        providers=providers,
+        elastic=elastic,
+        traffic=TrafficSpec(
+            facts_members=1024,
+            train_jobs=6,
+            train_blocks=3,
+            train_block_s=6.0,
+            serve_waves=4,
+            serve_tasks_per_wave=16,
+            serve_task_s=0.5,
+        ),
+        chaos=[
+            ChaosDecl(kind="site_outage", at_s=40.0, site="jet2"),
+            ChaosDecl(kind="quarantine_storm", at_s=45.0, template="burst", duration_s=60.0),
+            ChaosDecl(
+                kind="link_window",
+                at_s=60.0,
+                duration_s=30.0,
+                src_platform="cloud",
+                dst_platform="hpc",
+                factor=0.0,  # partition
+            ),
+            ChaosDecl(kind="preempt_kill", at_s=80.0, count=12),
+        ],
+    )
+
+
+def searise_full(seed: int = 0) -> ScenarioSpec:
+    """Nightly scale: a 2k-member ensemble and a longer fault sequence."""
+    spec = searise_at_scale(seed)
+    spec.name = "searise-full"
+    spec.traffic.facts_members = 2048
+    spec.traffic.train_jobs = 8
+    spec.traffic.serve_waves = 8
+    spec.chaos = spec.chaos + [
+        ChaosDecl(
+            kind="link_window",
+            at_s=120.0,
+            duration_s=20.0,
+            src_platform="cloud",
+            dst_platform="cloud",
+            factor=0.1,  # degradation, not partition
+        ),
+        ChaosDecl(kind="preempt_kill", at_s=140.0, count=16),
+    ]
+    return spec

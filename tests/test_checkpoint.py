@@ -1,0 +1,103 @@
+"""Checkpoint subsystem (ckpt/checkpoint.py) under failure: save -> kill ->
+restore round-trips driven under a VirtualClock, crash-consistency of the
+atomic step directories and the LATEST pointer, and async-writer error
+surfacing.
+
+Complements tests/test_ckpt_data.py (happy-path round-trip + train-restart
+equivalence): this file is about what survives a kill."""
+from __future__ import annotations
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.runtime.clock import virtual_time
+
+
+def _state(step: int = 0):
+    return {
+        "params": {"w": np.arange(12, dtype=np.float32).reshape(3, 4) + step},
+        "opt": {"m": np.full((3, 4), float(step)), "step": np.asarray(step, np.int32)},
+    }
+
+
+def _assert_tree_equal(a, b):
+    import jax
+
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_save_kill_restore_roundtrip_under_virtual_clock(tmp_path):
+    """The scenario harness's train traffic models exactly this loop: write
+    checkpoints, die mid-run, restart from LATEST.  The writer must not
+    depend on wall-clock time — the whole round-trip runs inside an active
+    VirtualClock, like every scenario run."""
+    with virtual_time():
+        ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=3)
+        for step in (1, 2, 3):
+            ac.save(step, _state(step))
+        ac.wait()
+        # "kill": drop the checkpointer mid-lifecycle, start from disk alone
+        del ac
+        assert ckpt.latest_step(str(tmp_path)) == 3
+        step, restored = ckpt.restore(str(tmp_path), _state())
+        assert step == 3
+        _assert_tree_equal(restored, _state(3))
+
+
+def test_crash_mid_save_leaves_previous_checkpoint_restorable(tmp_path):
+    """A kill between the temp write and the atomic rename leaves a .tmp_*
+    directory behind; LATEST and restore() must still serve the last good
+    step, and a later save must land normally."""
+    ckpt.save(str(tmp_path), 5, _state(5))
+    # simulate the torn save: a half-written temp dir that never renamed
+    torn = tmp_path / ".tmp_torn"
+    torn.mkdir()
+    (torn / "arrays.npz").write_bytes(b"partial garbage")
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    step, restored = ckpt.restore(str(tmp_path), _state())
+    assert step == 5
+    _assert_tree_equal(restored, _state(5))
+    ckpt.save(str(tmp_path), 6, _state(6))
+    assert ckpt.latest_step(str(tmp_path)) == 6
+
+
+def test_latest_pointing_at_missing_step_reports_no_checkpoint(tmp_path):
+    ckpt.save(str(tmp_path), 9, _state(9))
+    shutil.rmtree(tmp_path / "step_00000009")  # retention raced the pointer
+    assert ckpt.latest_step(str(tmp_path)) is None
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path), _state())
+
+
+def test_async_retention_keeps_only_newest(tmp_path):
+    with virtual_time():
+        ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+        for step in range(1, 6):
+            ac.save(step, _state(step))
+        ac.wait()
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000004", "step_00000005"]
+
+
+def test_async_write_error_surfaces_on_next_wait(tmp_path):
+    blocked = tmp_path / "not_a_dir"
+    blocked.write_text("a file where the checkpoint dir should go")
+    ac = ckpt.AsyncCheckpointer(str(blocked))
+    ac.save(1, _state(1))
+    with pytest.raises(OSError):
+        ac.wait()
+    # the error is consumed, not re-raised forever
+    ac.wait()
+
+
+def test_restore_specific_step_while_latest_moves_on(tmp_path):
+    for step in (1, 2):
+        ckpt.save(str(tmp_path), step, _state(step))
+    step, restored = ckpt.restore(str(tmp_path), _state(), step=1)
+    assert step == 1
+    _assert_tree_equal(restored, _state(1))

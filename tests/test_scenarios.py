@@ -1,0 +1,362 @@
+"""Sea-rise at scale: the standing scenario harness (repro/scenarios) and
+the chaos engine (core/chaos.py) it drives.
+
+Two layers of coverage:
+
+  * unit tests of each injection point against a tiny live broker on a
+    manually-driven VirtualClock — link windows open/close and restore the
+    saved models, quarantine storms gate and lift, preempt kills route
+    through the normal retry machinery, site outages take the provider and
+    (for groups) its staging site down together;
+  * the ISSUE's acceptance scenario: ``searise_at_scale`` (a 1024-member
+    FACTS ensemble + train/serve traffic, four correlated fault events)
+    must complete with ZERO failed tasks, makespan inflation <= 1.5x vs its
+    no-chaos twin, a clean strict ledger, nothing stranded after shutdown,
+    and a bit-identical report fingerprint on a rerun with the same seed.
+
+The at-scale runs execute entirely under VirtualClock (modeled runtimes,
+real footprints), so ~4k tasks x 3 runs cost tens of real seconds, not
+hours."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.core import Hydra, ProviderSpec, Task, TaskState
+from repro.core.autoscaler import LaunchSpec, LatencyModel, ProviderPool
+from repro.core.chaos import (
+    ChaosEngine,
+    LinkWindow,
+    PreemptKill,
+    QuarantineStorm,
+    SiteOutage,
+)
+from repro.core.staging import FALLBACK_LINK
+from repro.runtime.clock import virtual_time
+from repro.scenarios import ScenarioSpec, presets
+from repro.scenarios.runner import (
+    check_invariants,
+    makespan_inflation,
+    run_scenario,
+)
+
+from conftest import wait_until
+
+
+# ---------------------------------------------------------------------------
+# ChaosEngine mechanics (tiny broker, manual clock)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_broker(tmp_path, *, hpc: bool = True) -> Hydra:
+    h = Hydra(pod_store="memory", streaming=True, batch_window=0.0, workdir=str(tmp_path))
+    h.register_provider(ProviderSpec(name="a", platform="cloud", concurrency=2))
+    if hpc:
+        h.register_provider(
+            ProviderSpec(name="hp", platform="hpc", connector="pilot", concurrency=2)
+        )
+    return h
+
+
+def test_link_window_overrides_and_restores_models(tmp_path):
+    with virtual_time(auto_advance=False) as clock:
+        h = _tiny_broker(tmp_path)
+        eng = h.staging.engine
+        before = eng.links.get(("cloud", "hpc"), FALLBACK_LINK)
+        chaos = ChaosEngine(
+            h,
+            [LinkWindow(at_s=1.0, duration_s=2.0, src_platform="cloud", dst_platform="hpc")],
+        ).arm()
+        clock.advance(1.0)
+        # both directions partitioned while the window is open
+        assert eng.links[("cloud", "hpc")].bandwidth_mbps < 1.0
+        assert eng.links[("hpc", "cloud")].bandwidth_mbps < 1.0
+        assert chaos.stats()["open_link_windows"] == 1
+        clock.advance(2.0)
+        assert eng.links[("cloud", "hpc")] == before
+        assert chaos.stats()["open_link_windows"] == 0
+        kinds = [e["kind"] for e in chaos.log]
+        assert kinds == ["link_window", "link_restore"]
+        h.shutdown(wait=True)
+
+
+def test_link_degradation_scales_bandwidth_not_partition(tmp_path):
+    with virtual_time(auto_advance=False) as clock:
+        h = _tiny_broker(tmp_path)
+        eng = h.staging.engine
+        base = eng.links.get(("cloud", "cloud"), FALLBACK_LINK)
+        ChaosEngine(
+            h,
+            [
+                LinkWindow(
+                    at_s=0.0,
+                    duration_s=5.0,
+                    src_platform="cloud",
+                    dst_platform="cloud",
+                    factor=0.25,
+                )
+            ],
+        ).arm()
+        clock.advance(0.0)
+        assert eng.links[("cloud", "cloud")].bandwidth_mbps == pytest.approx(
+            base.bandwidth_mbps * 0.25
+        )
+        clock.advance(5.0)
+        assert eng.links[("cloud", "cloud")] == base
+        h.shutdown(wait=True)
+
+
+def test_partitioned_transfer_restarts_and_completes_after_restore(tmp_path):
+    """An in-flight cross-platform transfer caught by a partition is
+    restarted under the (unroutable) window model, then restarted again at
+    restore time and completes at real-link speed — the task never fails."""
+    with virtual_time(auto_advance=False) as clock:
+        h = _tiny_broker(tmp_path)
+        # sole replica on the cloud site: the pull MUST ride cloud->hpc
+        h.staging.registry.add("d", 200.0, sites=["a"], pinned=True)
+        t = Task(kind="noop", inputs=["d"], provider="hp")  # cloud -> hpc pull
+        h.dispatch([t])
+        eng = h.staging.engine
+        assert wait_until(lambda: eng.active_transfers() == 1)
+        chaos = ChaosEngine(
+            h,
+            [LinkWindow(at_s=1.0, duration_s=4.0, src_platform="cloud", dst_platform="hpc")],
+        ).arm()
+        clock.advance(1.0)
+        (entry,) = [e for e in chaos.log if e["kind"] == "link_window"]
+        assert entry["detail"]["restarted_transfers"] >= 1
+        # partitioned: nowhere near done after a window's worth of time
+        clock.advance(3.0)
+        assert not t.done()
+        ok = wait_until(lambda: (clock.advance(5.0), t.done())[1], timeout=10.0)
+        assert ok and t.exception() is None
+        h.shutdown(wait=True)
+
+
+def test_quarantine_storm_gates_template_then_lifts(tmp_path):
+    with virtual_time(auto_advance=False) as clock:
+        h = _tiny_broker(tmp_path, hpc=False)
+        pool = ProviderPool(
+            [
+                LaunchSpec(
+                    template=ProviderSpec(name="burst", platform="cloud"),
+                    max_instances=2,
+                    latency=LatencyModel(distribution="fixed", mean_s=1.0),
+                )
+            ]
+        )
+        h.autoscale(pool, tick_s=1.0)
+        chaos = ChaosEngine(
+            h, [QuarantineStorm(at_s=1.0, template="burst", duration_s=3.0)]
+        ).arm()
+        clock.advance(1.0)
+        assert pool.quarantined() == ["burst"]
+        clock.advance(3.0)
+        assert pool.quarantined() == []
+        kinds = [e["kind"] for e in chaos.log]
+        assert kinds == ["quarantine_storm", "quarantine_lift"]
+        h.shutdown(wait=True)
+
+
+def test_preempt_kill_retries_task_to_completion(tmp_path):
+    with virtual_time(auto_advance=False) as clock:
+        h = _tiny_broker(tmp_path)  # two providers: the retry excludes the killer
+        t = Task(kind="sleep", duration=5.0)
+        h.dispatch([t])
+        # the sleep is parked on a virtual deadline: RUNNING is stable here
+        assert wait_until(lambda: t.tstate == TaskState.RUNNING, timeout=10.0)
+        chaos = ChaosEngine(h, [PreemptKill(at_s=0.0, count=1)])
+        detail = chaos._preempt_kill(PreemptKill(at_s=0.0, count=1))
+        assert detail["killed"] == 1
+        # serve the killed sleep (manager notices FAILED) and then the retry
+        assert wait_until(lambda: (clock.advance(5.0), t.done())[1], timeout=15.0)
+        assert t.exception() is None and t.retries == 1
+        assert "preempted" in [e for e, _ in t.trace.events]
+        # across the fleet: exactly one failure, exactly one completion —
+        # no stranded future, no double ledger count
+        stats = [h.manager(n) for n in ("a", "hp")]
+        assert sum(m.failed for m in stats) == 1
+        assert sum(m.completed for m in stats) == 1
+        h.shutdown(wait=True)
+
+
+def test_preempt_kill_skips_tasks_out_of_retry_budget(tmp_path):
+    with virtual_time(auto_advance=False) as clock:
+        h = _tiny_broker(tmp_path, hpc=False)
+        t = Task(kind="sleep", duration=5.0, max_retries=0)
+        h.dispatch([t])
+        assert wait_until(lambda: t.tstate == TaskState.RUNNING, timeout=10.0)
+        chaos = ChaosEngine(h, [])
+        detail = chaos._preempt_kill(PreemptKill(at_s=0.0, count=4))
+        assert detail["killed"] == 0  # no retry budget: not a victim
+        assert wait_until(lambda: (clock.advance(5.0), t.done())[1], timeout=15.0)
+        assert t.exception() is None
+        h.shutdown(wait=True)
+
+
+def test_site_outage_removes_provider_and_staging_site(tmp_path):
+    with virtual_time():
+        h = _tiny_broker(tmp_path)
+        chaos = ChaosEngine(h, [])
+        detail = chaos._site_outage(SiteOutage(at_s=0.0, site="a"))
+        assert detail == {"removed": ["a"]}
+        assert "a" not in [p.name for p in h.proxy.bind_targets()]
+        # double-kill is a no-op, not a raise
+        assert chaos._site_outage(SiteOutage(at_s=0.0, site="a")) == {"removed": []}
+        h.shutdown(wait=True)
+
+
+def test_engine_never_raises_out_of_a_clock_callback(tmp_path):
+    with virtual_time(auto_advance=False) as clock:
+        h = _tiny_broker(tmp_path, hpc=False)
+        chaos = ChaosEngine(h, [QuarantineStorm(at_s=0.5, template="ghost")]).arm()
+        clock.advance(0.5)  # no autoscaler attached: handler reports, not raises
+        (entry,) = chaos.log
+        assert entry["detail"] == {"skipped": "no autoscaler attached"}
+        h.shutdown(wait=True)
+
+
+def test_arm_twice_raises_and_planned_schedule_is_sorted(tmp_path):
+    with virtual_time():
+        h = _tiny_broker(tmp_path, hpc=False)
+        events = [
+            PreemptKill(at_s=9.0, count=1),
+            SiteOutage(at_s=3.0, site="a"),
+            QuarantineStorm(at_s=3.0, template="b"),
+        ]
+        chaos = ChaosEngine(h, events)
+        assert chaos.planned() == [
+            (3.0, "quarantine_storm", "b"),
+            (3.0, "site_outage", "a"),
+            (9.0, "preempt_kill", "*"),
+        ]
+        chaos.arm()
+        with pytest.raises(RuntimeError):
+            chaos.arm()
+        chaos.stop()
+        h.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# Spec round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_spec_json_roundtrip():
+    spec = presets.searise_at_scale(seed=7)
+    blob = json.dumps(spec.to_dict())  # must be JSON-serializable as-is
+    back = ScenarioSpec.from_dict(json.loads(blob))
+    assert back == spec
+    # declarative chaos maps onto the typed core events
+    kinds = [c.to_core().kind for c in back.chaos]
+    assert kinds == ["site_outage", "quarantine_storm", "link_window", "preempt_kill"]
+
+
+# ---------------------------------------------------------------------------
+# Smoke scenario: the full loop at unit-test scale
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_reports():
+    spec = presets.searise_smoke()
+    return spec, run_scenario(spec, chaos=True), run_scenario(spec, chaos=False)
+
+
+def test_smoke_scenario_holds_invariants(smoke_reports):
+    spec, chaos, base = smoke_reports
+    assert check_invariants(chaos, base, spec) == []
+    assert chaos.failed_tasks == 0 and base.failed_tasks == 0
+
+
+def test_smoke_scenario_faults_hit_live_work(smoke_reports):
+    """Regression: events scheduled before the cold-staging ramp ends hit an
+    idle fleet and verify nothing.  The preset's schedule must land on
+    running tasks and produce observable recoveries."""
+    spec, chaos, _ = smoke_reports
+    assert chaos.preempted_tasks > 0
+    assert chaos.recovered_tasks > 0
+    assert chaos.recovery_s is not None and chaos.recovery_s > 0
+    assert chaos.first_fault_s == pytest.approx(spec.chaos[0].at_s)
+    injected = chaos.chaos_stats["injected"]
+    assert injected["site_outage"] == 1 and injected["link_window"] == 1
+    assert injected["quarantine_storm"] == 1 and injected["preempt_kill"] == 1
+    assert injected["link_restore"] == 1 and injected["quarantine_lift"] == 1
+
+
+def test_smoke_report_round_trips_to_json(smoke_reports):
+    _, chaos, _ = smoke_reports
+    doc = json.loads(json.dumps(chaos.to_dict()))
+    assert doc["failed_tasks"] == 0
+    assert doc["fingerprint"] == chaos.fingerprint()
+    assert len(doc["events"]) == len(chaos.events)
+
+
+# ---------------------------------------------------------------------------
+# The acceptance scenario: searise_at_scale (ISSUE)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def at_scale_reports():
+    spec = presets.searise_at_scale()
+    chaos = run_scenario(spec, chaos=True)
+    base = run_scenario(spec, chaos=False)
+    rerun = run_scenario(spec, chaos=True)
+    return spec, chaos, base, rerun
+
+
+def test_at_scale_is_the_issue_shape(at_scale_reports):
+    spec, chaos, _, _ = at_scale_reports
+    tr = spec.traffic
+    assert tr.facts_members >= 1024  # >= 1k ensemble members
+    want = (
+        tr.facts_members * 4
+        + tr.train_jobs * tr.train_blocks
+        + tr.serve_waves * tr.serve_tasks_per_wave
+    )
+    assert chaos.n_tasks == want
+    kinds = {kind for _, kind, _ in chaos.event_schedule}
+    assert {"site_outage", "link_window", "preempt_kill"} <= kinds
+    assert len(chaos.event_schedule) >= 3
+
+
+def test_at_scale_zero_failed_tasks_under_chaos(at_scale_reports):
+    spec, chaos, base, _ = at_scale_reports
+    assert check_invariants(chaos, base, spec) == []
+    assert chaos.failed_tasks == 0 and chaos.unresolved_tasks == 0
+    assert chaos.failed_workflows == 0
+    assert chaos.ledger_error is None
+
+
+def test_at_scale_makespan_inflation_bounded(at_scale_reports):
+    spec, chaos, base, _ = at_scale_reports
+    assert makespan_inflation(chaos, base) <= spec.max_makespan_inflation
+
+
+def test_at_scale_recovers_visibly(at_scale_reports):
+    _, chaos, _, _ = at_scale_reports
+    assert chaos.preempted_tasks > 0
+    assert chaos.recovered_tasks > 0
+    assert chaos.first_fault_s is not None
+
+
+def test_at_scale_nothing_stranded_after_shutdown(at_scale_reports):
+    _, chaos, base, _ = at_scale_reports
+    for rep in (chaos, base):
+        assert rep.stranded_blocked == 0
+        assert rep.stranded_retry_timers == 0
+        assert rep.pending_deadlines == 0
+
+
+def test_at_scale_identical_seed_identical_report(at_scale_reports):
+    spec, chaos, _, rerun = at_scale_reports
+    assert chaos.fingerprint() == rerun.fingerprint()
+    assert chaos.event_schedule == rerun.event_schedule
+    assert chaos.n_tasks == rerun.n_tasks
+    assert rerun.failed_tasks == 0
+    # and the planned schedule is exactly the spec's declaration
+    assert chaos.event_schedule == [
+        (c.at_s, c.to_core().kind, c.to_core().target) for c in spec.chaos
+    ]

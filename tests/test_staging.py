@@ -447,6 +447,64 @@ def test_provider_death_mid_transfer_reroutes_and_no_task_fails(tmp_path):
         h.shutdown(wait=True)
 
 
+def test_provider_death_as_source_and_reserved_target_recovers_both(tmp_path):
+    """Correlated chaos regression: ONE provider dies while it is BOTH the
+    source of an in-flight transfer (another task's pull) AND the reserved
+    placement target of a task parked at the staging gate.  The transfer
+    must re-route to a surviving replica and the parked task must re-gate
+    to a surviving placement — zero failed tasks."""
+    with virtual_time(auto_advance=False) as clock:
+        h = Hydra(
+            pod_store="memory",
+            streaming=True,
+            batch_window=0.0,
+            workdir=str(tmp_path),
+        )
+        h.register_provider(ProviderSpec(name="a", platform="cloud"))
+        h.register_provider(ProviderSpec(name="b", platform="cloud"))
+        # src_d: replica on a (the fast source) + shared (the survivor)
+        h.staging.registry.add("src_d", 600.0, sites=["shared"], pinned=True)
+        h.staging.registry.place_replica("src_d", "a")
+        # gate_d: shared only; t2 pins to a, so the gate reserves a and
+        # stages shared -> a
+        h.staging.registry.add("gate_d", 400.0, sites=["shared"], pinned=True)
+        t1 = Task(kind="noop", inputs=["src_d"], provider="b")  # a -> b pull
+        t2 = Task(kind="noop", inputs=["gate_d"], provider="a")
+        h.dispatch([t1, t2])
+        eng = h.staging.engine
+        assert wait_until(lambda: eng.active_transfers() == 2)
+        assert t2.reserved_provider == "a"  # parked at the gate, target a
+        h.remove_provider("a", drain=False, deregister=True)  # dies wearing both hats
+        ok = wait_until(
+            lambda: (clock.advance(5.0), t1.done() and t2.done())[1], timeout=20.0
+        )
+        assert ok
+        assert t1.exception() is None and t2.exception() is None
+        assert eng.reroutes >= 1  # t1's pull restarted from the shared replica
+        assert t2.staging_attempts >= 1  # t2 re-entered the gate after the loss
+        assert t2.provider == "b"
+        assert h.staging.registry.resident("src_d", "b")
+        assert h.staging.registry.resident("gate_d", "b")
+        h.shutdown(wait=True)
+
+
+def test_dead_reservation_is_released_and_regated(tmp_path):
+    """A task that reaches the gate still carrying a reservation on a
+    now-dead provider must shed it (trace-visible) and re-bind — not let
+    bind_bulk silently re-choose a site its inputs never reached."""
+    h = Hydra(pod_store="memory", streaming=True, batch_window=0.001, workdir=str(tmp_path))
+    h.register_provider(ProviderSpec(name="b", platform="cloud"))
+    h.staging.registry.add("in0", 20.0, sites=["shared"], pinned=True)
+    t = Task(kind="sleep", duration=0.01, inputs=["in0"])
+    t.reserved_provider = "ghost"  # reservation whose target no longer exists
+    h.dispatch([t])
+    assert wait_until(lambda: t.done(), timeout=10.0)
+    assert t.exception() is None
+    assert "regate:ghost" in [e for e, _ in t.trace.events]
+    assert t.provider == "b"
+    h.shutdown(wait=True)
+
+
 def test_graceful_drain_evacuates_last_copy_data(tmp_path):
     """Regression: an elastic scale-in (voluntary drain) used to destroy the
     only replica of intermediate stage-out data, terminally failing queued
