@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging bench-sched bench-scenario bench-check
+.PHONY: test test-fast lint cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging bench-sched bench-scenario bench-tenants bench-check
 
 test:  ## tier-1 verify (ROADMAP.md)
 	$(PY) -m pytest -x -q
@@ -45,6 +45,9 @@ bench-sched:  ## exp9 only: broker dispatch throughput, 100k tasks x 256 provide
 
 bench-scenario:  ## exp10 only: at-scale chaos scenario + structured report
 	$(PY) -m benchmarks.exp10_scenario --report
+
+bench-tenants:  ## exp11 only: interactive p99 under a 100k-task bulk flood
+	$(PY) -m benchmarks.exp11_tenants --full
 
 bench-check:  ## smoke run + dispatch-throughput regression gate vs committed baseline
 	git show HEAD:artifacts/bench/BENCH_smoke.json > /tmp/bench_baseline.json

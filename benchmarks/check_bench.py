@@ -9,9 +9,11 @@ refreshed by committing a new BENCH_smoke.json.
 
 Gates:
 
-  exp9_sched.dispatch_tasks_per_s   higher is better (throughput floor)
-  exp10_scenario.makespan_inflation lower is better (resilience ceiling)
-  exp10_scenario.failed             HARD: must be exactly 0 in the fresh run
+  exp9_sched.dispatch_tasks_per_s    higher is better (throughput floor)
+  exp10_scenario.makespan_inflation  lower is better (resilience ceiling)
+  exp11_tenants.interactive_p99_ratio lower is better, plus a HARD absolute
+                                     ceiling of 3.0 on the fresh run
+  exp10_scenario.failed              HARD: must be exactly 0 in the fresh run
 
 A gated row missing from the *baseline* is skipped (first PR that adds the
 experiment); missing from the *fresh* run it is an error (the experiment
@@ -49,9 +51,15 @@ class Gate:
 GATES = [
     Gate(row="exp9_sched", metric="dispatch_tasks_per_s", higher_is_better=True),
     Gate(row="exp10_scenario", metric="makespan_inflation", higher_is_better=False),
+    Gate(row="exp11_tenants", metric="interactive_p99_ratio", higher_is_better=False),
 ]
 # hard invariants on the fresh run, independent of any baseline
 HARD_ZERO = [("exp10_scenario", "failed"), ("exp10_scenario", "violations")]
+# absolute ceilings on the fresh run: the relative gate above catches drift,
+# this catches a baseline that was already bad (a 2.9 -> 3.5 ratio would pass
+# a 30% drift check; an interactive p99 more than 3x its unloaded floor means
+# the SLO lanes are not actually isolating tenants)
+HARD_MAX = [("exp11_tenants", "interactive_p99_ratio", 3.0)]
 
 
 def _rows(path: str) -> dict[str, str]:
@@ -106,6 +114,19 @@ def check_hard_zero(fresh: dict) -> list[str]:
     return failures
 
 
+def check_hard_max(fresh: dict) -> list[str]:
+    failures = []
+    for row, metric, ceiling in HARD_MAX:
+        val = metric_value(fresh, row, metric)
+        if val is None:
+            failures.append(f"{row}.{metric}: missing from the fresh run")
+        elif val > ceiling:
+            failures.append(f"{row}.{metric} must be <= {ceiling:g}, got {val:g}")
+        else:
+            print(f"{row}.{metric}: {val:g} <= {ceiling:g} -> OK")
+    return failures
+
+
 def main(argv: list[str]) -> int:
     if len(argv) < 2:
         print(__doc__)
@@ -119,6 +140,7 @@ def main(argv: list[str]) -> int:
         if (msg := check_gate(gate, baseline, fresh, tolerance)) is not None
     ]
     failures += check_hard_zero(fresh)
+    failures += check_hard_max(fresh)
     for msg in failures:
         print(f"FAIL: {msg}")
     return 1 if failures else 0

@@ -1,0 +1,179 @@
+"""Experiment 11: multi-tenant front door — interactive SLO under flood.
+
+The serving story (ROADMAP: "millions of users needs a tenant layer above
+the ready heap"): one tenant floods the broker with a huge batch backlog
+while another sends a steady trickle of short interactive requests.  Without
+the front door the flood buries the single ready heap and interactive
+latency scales with the flood size; with admission control (bounded tenant
+queue + typed AdmissionError backpressure) and SLO-class lanes (interactive
+drains before queued batch backfill every round) the interactive p99 stays
+within a small constant of its unloaded value, whatever the flood size.
+
+Two arms, identical interactive trickle, virtual clock throughout:
+
+  unloaded - the trickle alone: the p99 floor (task time + dispatch cost).
+  flooded  - the same trickle racing a batch flood submitted through a
+             bounded tenant queue; the flood submitter obeys backpressure
+             (catches AdmissionError, sleeps, retries) — rejections > 0
+             proves the front door actually throttled it.
+
+Derived metrics:
+
+  interactive_p99_ratio  flooded p99 / unloaded p99 — gated in
+                         check_bench.py (<= 30% drift vs baseline, hard
+                         absolute ceiling 3.0 on the fresh run).
+  rejections             AdmissionError count the flood submitter absorbed.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core import Hydra, ProviderSpec, Task
+from repro.core.admission import AdmissionError, TenantSpec
+from repro.runtime.clock import get_clock, virtual_time
+
+from benchmarks.common import print_rows, write_csv
+
+INTERACTIVE_S = 0.25  # modeled interactive request runtime
+FLOOD_TASK_S = 0.1  # modeled batch task runtime
+TRICKLE_GAP_S = 0.5  # virtual seconds between interactive requests
+FLOOD_CHUNK = 512  # tasks per dispatch() attempt
+BULK_MAX_QUEUED = 2048  # the bounded tenant queue the flood slams into
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, int(q * len(sorted_vals)) - 1))
+    return sorted_vals[idx]
+
+
+def _run_arm(
+    flood_tasks: int,
+    n_interactive: int,
+    concurrency: int,
+    timeout_s: float = 900.0,
+) -> dict:
+    """One arm: an interactive trickle, optionally racing a bounded flood."""
+    with virtual_time():
+        h = Hydra(
+            pod_store="memory",
+            streaming=True,
+            batch_window=0.0,
+            max_batch=64,
+            tenants=[
+                TenantSpec(name="serve", weight=2.0),
+                TenantSpec(name="bulk", weight=1.0, max_queued=BULK_MAX_QUEUED),
+            ],
+        )
+        h.register_provider(ProviderSpec(name="p", concurrency=concurrency))
+        clock = get_clock()
+        rejections = 0
+        flood: list[Task] = []
+        t_start = time.perf_counter()
+
+        def pump_flood() -> None:
+            # the well-behaved bulk submitter: push chunks, absorb typed
+            # backpressure, retry after the hinted (or a default) delay
+            nonlocal rejections
+            remaining = flood_tasks
+            while remaining > 0:
+                chunk = [
+                    Task(kind="sleep", duration=FLOOD_TASK_S, tenant="bulk")
+                    for _ in range(min(FLOOD_CHUNK, remaining))
+                ]
+                try:
+                    h.dispatch(chunk)
+                except AdmissionError as e:
+                    rejections += 1
+                    clock.sleep(e.retry_after_s or 1.0)
+                    continue
+                flood.extend(chunk)
+                remaining -= len(chunk)
+
+        pump = None
+        if flood_tasks:
+            pump = threading.Thread(target=pump_flood, daemon=True, name="flood")
+            pump.start()
+            clock.sleep(2.0)  # let the flood bury the queue before trickling
+
+        latencies: list[float] = []
+        serve: list[Task] = []
+        for _ in range(n_interactive):
+            t = Task(
+                kind="sleep",
+                duration=INTERACTIVE_S,
+                tenant="serve",
+                slo_class="interactive",
+            )
+            t0 = clock.now()
+            h.dispatch([t])
+            serve.append(t)
+            t.add_done_callback(
+                lambda _f, t=t, t0=t0: latencies.append(
+                    (t.trace.last("exec_done") or t0) - t0
+                )
+            )
+            clock.sleep(TRICKLE_GAP_S)
+
+        deadline = time.monotonic() + timeout_s
+        if pump is not None:
+            pump.join(timeout=timeout_s)
+        for t in serve + flood:
+            left = deadline - time.monotonic()
+            if left <= 0:
+                raise TimeoutError(f"exp11: drain exceeded {timeout_s:.0f}s")
+            t.result(timeout=left)
+        wall_s = time.perf_counter() - t_start
+        stats = h.tenant_stats()
+        h.shutdown(wait=False)
+
+    latencies.sort()
+    return {
+        "n_flood": flood_tasks,
+        "n_interactive": n_interactive,
+        "p50_s": round(_percentile(latencies, 0.50), 4),
+        "p99_s": round(_percentile(latencies, 0.99), 4),
+        "rejections": rejections,
+        "admitted": stats.get("admitted", 0),
+        "wall_s": round(wall_s, 3),
+    }
+
+
+def run(
+    flood_tasks: int = 100_000,
+    n_interactive: int = 200,
+    concurrency: int = 16,
+    verbose: bool = True,
+) -> list[dict]:
+    rows: list[dict] = []
+    unloaded = _run_arm(0, n_interactive, concurrency)
+    unloaded.update({"exp": "exp11", "mode": "unloaded"})
+    rows.append(unloaded)
+    flooded = _run_arm(flood_tasks, n_interactive, concurrency)
+    flooded.update({"exp": "exp11", "mode": "flooded"})
+    rows.append(flooded)
+    ratio = flooded["p99_s"] / max(unloaded["p99_s"], 1e-9)
+    for r in rows:
+        r["interactive_p99_ratio"] = round(ratio, 3)
+    write_csv("exp11_tenants", rows)
+    if verbose:
+        print_rows(rows)
+    return rows
+
+
+def main(full: bool = False, smoke: bool = False) -> list[dict]:
+    if smoke:
+        # CI-sized: a 10k flood is already 5x the bounded tenant queue, so
+        # the backpressure loop and lane preemption are both exercised
+        return run(flood_tasks=10_000, n_interactive=100)
+    if full:
+        return run()  # the nightly 100k flood
+    return run(flood_tasks=20_000, n_interactive=100)
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(full="--full" in sys.argv, smoke="--smoke" in sys.argv)

@@ -65,6 +65,16 @@ def _exp10_summary(rows: list[dict]) -> str:
     )
 
 
+def _exp11_summary(rows: list[dict]) -> str:
+    flooded = next(r for r in rows if r["mode"] == "flooded")
+    return (
+        f"exp11_tenants,{flooded['n_flood']},"
+        f"interactive_p99_ratio={flooded['interactive_p99_ratio']:.3f}"
+        f"_flooded_p99_s={flooded['p99_s']:.3f}"
+        f"_rejections={flooded['rejections']}"
+    )
+
+
 def _exp7_summary(rows: list[dict]) -> str:
     weak = [r for r in rows if r["mode"] == "weak"]
     elastic = [r for r in rows if r["mode"] == "elastic"]
@@ -105,6 +115,7 @@ def run_smoke() -> list[str]:
         exp8_staging,
         exp9_sched,
         exp10_scenario,
+        exp11_tenants,
     )
 
     print("== Exp 1 (smoke): per-provider scaling ==")
@@ -133,6 +144,9 @@ def run_smoke() -> list[str]:
     print("== Exp 10 (smoke): chaos scenario (searise-smoke, chaos + twin) ==")
     out.append(_exp10_summary(exp10_scenario.main(smoke=True)))
 
+    print("== Exp 11 (smoke): multi-tenant front door (10k flood) ==")
+    out.append(_exp11_summary(exp11_tenants.main(smoke=True)))
+
     path = _write_bench_json("smoke", out)
     print(f"\nwrote {path}")
     return out
@@ -144,7 +158,7 @@ def run_all(full: bool) -> list[str]:
     from benchmarks import exp1_per_provider, exp2_cross_provider, exp3a_cross_platform
     from benchmarks import exp3b_heterogeneous, exp4_facts, exp5_groups, exp6_streaming
     from benchmarks import exp7_elastic, exp8_staging, exp9_sched, exp10_scenario
-    from benchmarks import kernels_bench, roofline_report
+    from benchmarks import exp11_tenants, kernels_bench, roofline_report
 
     print("== Exp 1: per-provider scaling (OVH/TH/TPT, MCPP vs SCPP) ==")
     r1 = exp1_per_provider.main(full)
@@ -188,6 +202,9 @@ def run_all(full: bool) -> list[str]:
 
     print("== Exp 10: chaos scenario (searise, chaos + no-chaos twin) ==")
     out.append(_exp10_summary(exp10_scenario.main(full)))
+
+    print("== Exp 11: multi-tenant front door (interactive p99 under flood) ==")
+    out.append(_exp11_summary(exp11_tenants.main(full)))
 
     print("== Kernel micro-benchmarks ==")
     for name, us, derived in kernels_bench.main(full):

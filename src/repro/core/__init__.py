@@ -1,4 +1,5 @@
 """Hydra broker core: the paper's contribution as a composable module."""
+from repro.core.admission import AdmissionController, AdmissionError, TenantSpec
 from repro.core.autoscaler import (
     Autoscaler,
     LatencyModel,
@@ -33,6 +34,9 @@ from repro.core.staging import (
 from repro.core.task import Resources, Task, TaskState
 
 __all__ = [
+    "AdmissionController",
+    "AdmissionError",
+    "TenantSpec",
     "Autoscaler",
     "BreakerState",
     "ChaosEngine",

@@ -323,12 +323,19 @@ class Autoscaler:
         warmup_ticks: int = 3,
         cooldown_ticks: int = 5,
         max_concurrent_acquisitions: int = 4,
+        interactive_scale_out_pressure: Optional[float] = None,
     ):
         self.broker = broker
         self.pool = pool
         self.tick_s = tick_s
         self.scale_out_pressure = scale_out_pressure
         self.scale_in_pressure = scale_in_pressure
+        # per-class scale-out (the front door's third leg): when set,
+        # interactive-lane pressure ALONE can open the scale-out gate at
+        # this (typically lower) threshold — so a throttled batch tenant
+        # cannot mask interactive demand behind a small aggregate number,
+        # and the fleet grows for the latency-sensitive class first
+        self.interactive_scale_out_pressure = interactive_scale_out_pressure
         self.warmup_ticks = max(1, warmup_ticks)
         self.cooldown_ticks = max(1, cooldown_ticks)
         self.max_concurrent_acquisitions = max(1, max_concurrent_acquisitions)
@@ -406,29 +413,70 @@ class Autoscaler:
                 self.trace.add("tick_error")
 
     # -- the decision tick ------------------------------------------------
-    def _demand(self) -> int:
+    def _demand(self) -> float:
         """Runnable demand: ready-queue depth + backlog, minus tasks stalled
-        purely on staging (core/staging.py).  A task waiting on bytes is not
-        a task a new provider could run — the dispatcher parks first-time
-        stage-ins outside the ready heap (so pending() never sees them), and
-        ``stalled_in_backlog()`` subtracts the re-gated retries the backlog
-        counter still holds.  Without this, a data-heavy burst would buy
-        providers that sit idle until the transfers land.  Every input here
-        is O(1) now (backlog/total/incoming are CapacityLedger counters), so
-        the tick costs the same at 10 providers or 256."""
-        d = self.broker._dispatcher
-        queued = d.pending() if d else 0
-        stalled = d.stalled_in_backlog() if d else 0
-        return queued + max(0, self.broker.backlog() - stalled)
+        purely on staging (core/staging.py), PLUS a decayed count of tasks
+        parked at the staging gate.  A task waiting on bytes is not a task a
+        new provider could run *right now* — the dispatcher parks first-time
+        stage-ins outside the ready heap (so queue_depth() never sees them),
+        and ``staging_stalled_in_backlog()`` subtracts the re-gated retries
+        the backlog counter still holds.  But those parked tasks WILL become
+        runnable the moment their transfers land, and pretending they don't
+        exist made a data-heavy burst invisible: the fleet stayed cold until
+        the bytes arrived, then every transfer completed into an undersized
+        pool.  ``deferred_demand()`` counts each parked task as
+        exp(-age/tau) — full weight when freshly parked (transfer about to
+        finish soon), decaying toward zero for tasks stuck behind slow or
+        broken links that no amount of compute would help.  Every input here
+        is O(1) or O(parked), so the tick stays cheap at 256 providers."""
+        queued = self.broker.queue_depth()
+        stalled = self.broker.staging_stalled_in_backlog()
+        deferred = self.broker.deferred_demand()
+        return queued + max(0, self.broker.backlog() - stalled) + deferred
 
     def pressure(self) -> float:
+        """Demand per available slot.  Zero-supply semantics (see
+        Dispatcher.queue_pressure): no demand -> 0.0 regardless of supply;
+        demand with zero live+incoming slots first consults probe_slots()
+        (capacity a probe could still reach, e.g. half-open breakers), and
+        if there is truly nothing, returns +inf — an entirely tripped fleet
+        facing a deep queue is the MOST pressured state, not the least.
+        The old ``demand / max(supply, 1)`` degenerated to the raw pending
+        count at supply==0, which merely *scaled* with the backlog instead
+        of slamming the scale-out gate."""
+        demand = self._demand()
+        if demand <= 0:
+            return 0.0
         supply = self.broker.total_slots() + self.broker.incoming_slots()
-        return self._demand() / max(supply, 1)
+        if supply <= 0:
+            supply = self.broker.probe_slots()
+        if supply <= 0:
+            return float("inf")
+        return demand / supply
+
+    def interactive_pressure(self) -> float:
+        """Interactive-lane depth per available slot (same zero-supply
+        semantics as pressure()).  Only meaningful with the multi-tenant
+        front door attached; 0.0 otherwise."""
+        depth = self.broker.queue_depth_by_class().get("interactive", 0)
+        if depth <= 0:
+            return 0.0
+        supply = self.broker.total_slots() + self.broker.incoming_slots()
+        if supply <= 0:
+            supply = self.broker.probe_slots()
+        if supply <= 0:
+            return float("inf")
+        return depth / supply
 
     def _tick(self) -> None:
         self.ticks += 1
         p = self.pressure()
         self.last_pressure = p
+        if self.interactive_scale_out_pressure is not None and p < self.scale_out_pressure:
+            # the per-class gate: interactive depth alone can force the
+            # scale-out path even when aggregate pressure looks tame
+            if self.interactive_pressure() >= self.interactive_scale_out_pressure:
+                p = self.scale_out_pressure
         if p >= self.scale_out_pressure:
             self._hot += 1
             self._cold = 0
@@ -537,9 +585,8 @@ class Autoscaler:
                 row["arrived_at"] = get_clock().now()
         self.arrivals += 1
         self.trace.add(f"arrived:{spec.name}")
-        if self.broker._dispatcher is not None:
-            # new capacity: wake the dispatcher so backfill sees it NOW
-            self.broker._dispatcher.notify_capacity()
+        # new capacity: wake the dispatcher so backfill sees it NOW
+        self.broker._notify_capacity()
 
     def note_provider_lost(self, name: str) -> None:
         """The broker blacklisted one of our instances (hard outage,
@@ -614,12 +661,14 @@ class Autoscaler:
             "arrivals": self.arrivals,
             "releases": self.releases,
             "aborts": self.aborts,
-            "last_pressure": round(self.last_pressure, 3),
-            "staging_stalled": (
-                self.broker._dispatcher.stalled_on_staging()
-                if self.broker._dispatcher
-                else 0
+            # JSON-safe: the +inf zero-supply sentinel serializes as null
+            "last_pressure": (
+                round(self.last_pressure, 3)
+                if math.isfinite(self.last_pressure)
+                else None
             ),
+            "staging_stalled": self.broker.staging_stalled(),
+            "deferred_demand": round(self.broker.deferred_demand(), 3),
             "hot_ticks": self._hot,
             "cold_ticks": self._cold,
             "pool": self.pool.counts(),

@@ -30,6 +30,7 @@ import threading
 from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
 from typing import Optional
 
+from repro.core.admission import AdmissionController, TenantSpec
 from repro.core.dispatcher import StreamingDispatcher
 from repro.core.fault import BreakerState, StragglerWatchdog, clone_for_speculation
 from repro.core.group import GroupExhausted, ProviderGroup
@@ -129,6 +130,7 @@ class Hydra:
         staging_links: Optional[dict[tuple[str, str], LinkModel]] = None,
         staging_max_per_link: int = 2,
         staging_mirror_outputs: bool = False,
+        tenants: Optional[list[TenantSpec]] = None,
     ):
         self.workdir = workdir or tempfile.mkdtemp(prefix="hydra_")
         os.makedirs(self.workdir, exist_ok=True)
@@ -157,6 +159,13 @@ class Hydra:
         self.streaming = streaming
         self._batch_window = batch_window
         self._max_batch = max_batch
+        # multi-tenant front door (core/admission.py): rate limits, bounded
+        # queues, and the fair-share weights the dispatcher's lane drain
+        # reads.  None (no tenant config) means NO admission anywhere — the
+        # pre-front-door fast path, bit-identical behavior and cost.
+        self.admission: Optional[AdmissionController] = (
+            AdmissionController(tenants) if tenants else None
+        )
         self._dispatcher: Optional[StreamingDispatcher] = None
         self.data = DataManager(os.path.join(self.workdir, "data"))
         # data-aware staging (core/staging.py): dataset registry + modeled
@@ -220,8 +229,26 @@ class Hydra:
                 ).start()
             return self._dispatcher
 
+    def configure_tenants(self, tenants: list[TenantSpec]) -> AdmissionController:
+        """Attach (or extend) the front door after construction.  Useful for
+        tests and for brokers built by generic factories; prefer the
+        ``tenants=`` constructor argument in application code."""
+        if self.admission is None:
+            self.admission = AdmissionController(tenants)
+        else:
+            for spec in tenants:
+                self.admission.add_tenant(spec)
+        return self.admission
+
     def dispatch(self, tasks: list[Task]) -> None:
-        """Feed ready tasks into the streaming dispatcher's queue."""
+        """Feed ready tasks into the streaming dispatcher's queue, through
+        the front door when one is configured: a rejected submission raises
+        ``AdmissionError`` (typed backpressure) *before* anything enqueues —
+        all-or-nothing, so a caller never has to hunt down a half-admitted
+        batch.  Internal requeues (retries, staging re-gates, failover,
+        speculation) carry ``task.admitted`` and are never re-charged."""
+        if self.admission is not None:
+            self.admission.admit(tasks)
         self.dispatcher().enqueue(tasks)
 
     def idle_slots(self) -> int:
@@ -283,6 +310,39 @@ class Hydra:
         resolves — replacing the per-tick scan of every live submission and
         its 50 ms staleness cache."""
         return self.ledger.backlog()
+
+    # ------------------------------------------------------------------
+    # Dispatcher reads, None-safe: the public face of the streaming queue.
+    # The autoscaler (and any other consumer) goes through these instead of
+    # reaching into ``broker._dispatcher`` — a broker without a dispatcher
+    # (frontier mode, or pre-first-use) reads as an empty queue, and stats
+    # code cannot couple itself to dispatcher internals.
+    # ------------------------------------------------------------------
+    def queue_depth(self) -> int:
+        """Ready-queue depth across every lane (0 without a dispatcher)."""
+        d = self._dispatcher
+        return d.pending() if d is not None else 0
+
+    def queue_depth_by_class(self) -> dict[str, int]:
+        """Ready-queue depth per SLO class (empty without a dispatcher)."""
+        d = self._dispatcher
+        return d.pending_by_class() if d is not None else {}
+
+    def staging_stalled(self) -> int:
+        """Tasks parked on stage-in transfers (0 without a dispatcher)."""
+        d = self._dispatcher
+        return d.stalled_on_staging() if d is not None else 0
+
+    def staging_stalled_in_backlog(self) -> int:
+        """The parked subset the backlog counter ALSO holds (re-gated
+        retries): what the autoscaler subtracts to avoid double counting."""
+        d = self._dispatcher
+        return d.stalled_in_backlog() if d is not None else 0
+
+    def deferred_demand(self) -> float:
+        """Staging-parked tasks as decayed demand (core/dispatcher.py)."""
+        d = self._dispatcher
+        return d.deferred_demand() if d is not None else 0.0
 
     # ------------------------------------------------------------------
     # CapacityLedger plumbing (core/ledger.py)
@@ -347,9 +407,16 @@ class Hydra:
         hits vs cold reads, eviction/re-route counts, transfer wait —
         benchmarks/exp8_staging.py compares these across placement arms."""
         stats = self.staging.stats()
-        stats["staging_blocked"] = (
-            self._dispatcher.stalled_on_staging() if self._dispatcher else 0
-        )
+        stats["staging_blocked"] = self.staging_stalled()
+        return stats
+
+    def tenant_stats(self) -> dict:
+        """Front-door snapshot: per-tenant held counts, admit/reject
+        totals, and the per-class queue depths (empty when no front door)."""
+        if self.admission is None:
+            return {}
+        stats = self.admission.stats()
+        stats["queue_by_class"] = self.queue_depth_by_class()
         return stats
 
     # ------------------------------------------------------------------
@@ -457,7 +524,7 @@ class Hydra:
             "idle_slots": self.idle_slots(),
             "incoming_slots": self.incoming_slots(),
             "pending_acquisitions": self.pending_acquisitions(),
-            "queue_depth": self._dispatcher.pending() if self._dispatcher else 0,
+            "queue_depth": self.queue_depth(),
         }
         if self.autoscaler is not None:
             stats["autoscaler"] = self.autoscaler.stats()
@@ -666,6 +733,10 @@ class Hydra:
     ) -> Submission:
         model = partitioning or self.partitioning
         tpp = tasks_per_pod or self.tasks_per_pod
+        # classic (non-streaming) entry pays admission too; the streaming
+        # dispatcher's micro-batches arrive already admitted (no-op here)
+        if self.admission is not None:
+            self.admission.admit(tasks)
         sub = Submission(tasks, self)
         with self._lock:
             self._submissions.append(sub)

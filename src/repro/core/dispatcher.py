@@ -29,12 +29,13 @@ tracker that feeds this queue.
 from __future__ import annotations
 
 import heapq
+import math
 import threading
 from typing import TYPE_CHECKING, Optional
 
-from repro.core.policy import NoEligibleProvider
+from repro.core.policy import NoEligibleProvider, apportion_budget
 from repro.core.staging import StagingError
-from repro.core.task import Task, TaskState
+from repro.core.task import SLO_CLASSES, Task, TaskState
 from repro.runtime.clock import get_clock
 from repro.runtime.tracing import Counter, Trace
 
@@ -63,15 +64,29 @@ class StreamingDispatcher:
         # persistent outage is surfaced onto the tasks instead of retried
         self.max_consecutive_failures = max_consecutive_failures
         self.trace = Trace()
-        # ready queue: a heap keyed by (depth, arrival) so the shallow-first
-        # drain is O(log n) per task instead of a full re-sort per round
-        self._pending: list[tuple[int, int, Task]] = []
-        self._queued: set[str] = set()  # uids in the heap (dedup guard)
+        # ready queue: per-(slo_class, tenant) LANES, each a heap keyed by
+        # (depth, arrival) so the shallow-first drain stays O(log n) per
+        # task.  The drain walks classes in strict SLO_CLASSES order —
+        # every interactive lane empties before any batch lane sees budget
+        # (queued batch backfill is preempted, not running work) — and
+        # splits the budget among same-class lanes by tenant weight
+        # (policy.apportion_budget, deficits carried in _lane_carry).  The
+        # single-lane common case (no tenant config) pops directly, so the
+        # exp9 hot path pays one dict lookup over the old flat heap.
+        self._lanes: dict[tuple[str, str], list[tuple[int, int, Task]]] = {}
+        self._lane_carry: dict[tuple[str, str], float] = {}
+        self._npending = 0
+        self._class_pending: dict[str, int] = {c: 0 for c in SLO_CLASSES}
+        self._queued: set[str] = set()  # uids in the lanes (dedup guard)
         # tasks parked on stage-in (core/staging.py): OUT of the ready heap,
         # so pending()/queue_pressure() never count work that no amount of
         # new capacity could run — exactly what keeps the autoscaler from
-        # buying providers for tasks that are waiting on bytes, not slots
+        # buying providers for tasks that are waiting on bytes, not slots.
+        # _blocked_at stamps the park time: deferred_demand() decays parked
+        # tasks back into the autoscaler's demand signal (recently parked ~
+        # transfers in flight ~ capacity needed soon; anciently stuck ~ 0).
         self._blocked: dict[str, Task] = {}
+        self._blocked_at: dict[str, float] = {}
         self.max_staging_attempts = 3
         self._seq = 0
         self._lock = threading.Lock()
@@ -115,7 +130,7 @@ class StreamingDispatcher:
         for timer, task in timers:
             timer.cancel()
             with self._lock:
-                self._blocked.pop(task.uid, None)
+                self._unpark_locked(task.uid)
             self._fail_task(
                 task,
                 StagingError(f"task {task.uid}: dispatcher stopped during staging retry"),
@@ -147,8 +162,13 @@ class StreamingDispatcher:
                 if t.uid in self._queued:
                     continue
                 self._queued.add(t.uid)
-                heapq.heappush(self._pending, (t.depth, self._seq, t))
+                lane = (t.slo_class, t.tenant)
+                heapq.heappush(
+                    self._lanes.setdefault(lane, []), (t.depth, self._seq, t)
+                )
                 self._seq += 1
+                self._npending += 1
+                self._class_pending[t.slo_class] += 1
                 added = True
             if added:
                 self._idle.clear()
@@ -156,15 +176,59 @@ class StreamingDispatcher:
 
     def pending(self) -> int:
         with self._lock:
-            return len(self._pending)
+            return self._npending
+
+    def pending_by_class(self) -> dict[str, int]:
+        """Ready-queue depth per SLO class: the autoscaler's per-class
+        pressure input, so interactive demand can buy capacity even while
+        batch admission is throttled."""
+        with self._lock:
+            return dict(self._class_pending)
 
     def queue_pressure(self) -> float:
         """Demand over supply: ready-queue depth / (idle + incoming slots).
         THE autoscaler input (core/autoscaler.py): > 1 means the queue could
         not be absorbed even if every free and in-acquisition slot took one
-        task; ~0 means the pool is idle."""
+        task; ~0 means the pool is idle.
+
+        Zero-supply semantics are explicit: no pending work is 0.0 whatever
+        the supply.  With pending work and no free slot, two states that the
+        old ``pending / max(supply, 1)`` conflated are now distinguished:
+        a *saturated-but-live* fleet (slots exist, all busy — in-flight work
+        will free them) reads as the raw pending count (finite, maximally
+        pressured), while a fleet with no live capacity at all (every
+        breaker OPEN, nothing incoming) reads as ``inf`` — a sentinel the
+        autoscaler maps through its probe-aware path (Autoscaler.pressure)
+        instead of a raw count that merely *scaled* with backlog (100k tasks
+        read as "pressure 100000", slamming the pool to max during a
+        full-fleet outage that a single breaker probe would recover)."""
+        pending = self.pending()
+        if pending <= 0:
+            return 0.0
         supply = self.broker.idle_slots() + self.broker.incoming_slots()
-        return self.pending() / max(supply, 1)
+        if supply > 0:
+            return pending / supply
+        # supply==0 implies incoming==0 too, so total alone decides whether
+        # any live slot could ever absorb this queue
+        if self.broker.total_slots() > 0:
+            return float(pending)
+        return float("inf")
+
+    def deferred_demand(self, tau_s: float = 60.0) -> float:
+        """Staging-parked tasks as *decayed* autoscaler demand.
+
+        A task parked on stage-in is not runnable — but its transfers are
+        in flight and it will want a slot in seconds, which is exactly when
+        an elastic pool that drained to zero during a link partition would
+        make the whole herd wait out a re-acquisition ramp.  Count each
+        parked task as ``exp(-age/tau)`` demand: freshly parked ~ 1 slot
+        needed soon, stuck-for-minutes ~ 0 (no point buying capacity for
+        bytes that are not arriving).  This replaces the at-scale preset's
+        ``min_instances`` warm-floor workaround (scenarios/presets.py)."""
+        now = get_clock().now()
+        with self._lock:
+            stamps = list(self._blocked_at.values())
+        return sum(math.exp(-max(0.0, now - t0) / tau_s) for t0 in stamps)
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until the queue is empty and no batch is in flight (tests)."""
@@ -175,7 +239,7 @@ class StreamingDispatcher:
         while not self._stop.is_set():
             if not self.pending():
                 with self._lock:
-                    if not self._pending:  # recheck under the lock
+                    if not self._npending:  # recheck under the lock
                         self._wake.clear()
                         # drain()'s contract is "nothing left to dispatch":
                         # a task parked on stage-in is still owed a dispatch,
@@ -220,15 +284,19 @@ class StreamingDispatcher:
                 self._stop.wait(0.05)
 
     def _take_batch(self) -> list[Task]:
-        """Drain up to the batch budget, shallow DAG depth first (backfill:
-        deeper-workflow tasks fill whatever capacity the frontier leaves).
+        """Drain up to the batch budget: strict SLO-class priority, weighted
+        fair share among same-class tenant lanes, shallow DAG depth first
+        within a lane (backfill: deeper-workflow tasks fill whatever
+        capacity the frontier leaves).
 
-        With an autoscaler attached the budget is capped at the pool's
+        With an autoscaler attached — or a tenant front door configured
+        (core/admission.py) — the budget is capped at the pool's
         actually-free slots: work held back here is precisely the queue
-        pressure that buys new providers, and late binding hands it to the
-        arriving capacity instead of burying a busy provider's internal
-        queue with everything up front."""
-        if self.broker.autoscaler is not None:
+        pressure that buys new providers, late binding hands it to arriving
+        capacity instead of burying a busy provider's internal queue, and
+        queued batch backfill stays HERE, preemptible by an interactive
+        lane, rather than becoming un-reorderable manager-queue depth."""
+        if self.broker.autoscaler is not None or self.broker.admission is not None:
             budget = min(self.max_batch, self.broker.idle_slots())
             if budget <= 0:
                 # the ledger reads zero, but a breaker whose reset window
@@ -244,13 +312,30 @@ class StreamingDispatcher:
         batch: list[Task] = []
         stale: list[Task] = []
         with self._lock:
-            while self._pending and len(batch) < budget:
-                _, _, t = heapq.heappop(self._pending)
-                self._queued.discard(t.uid)
-                if t.final:  # canceled while queued
-                    stale.append(t)
-                    continue
-                batch.append(t)
+            if len(self._lanes) == 1:
+                # the no-tenant-config fast path: one lane == the old flat
+                # heap, no apportionment arithmetic on the exp9 hot path
+                self._pop_lane(next(iter(self._lanes)), budget, batch, stale)
+            else:
+                remaining = budget
+                for slo_class in SLO_CLASSES:
+                    if remaining <= 0:
+                        break
+                    keys = sorted(k for k in self._lanes if k[0] == slo_class)
+                    if not keys:
+                        continue
+                    if len(keys) == 1:
+                        remaining -= self._pop_lane(keys[0], remaining, batch, stale)
+                        continue
+                    demands = [len(self._lanes[k]) for k in keys]
+                    weights = [self._tenant_weight(k[1]) for k in keys]
+                    carry = [self._lane_carry.get(k, 0.0) for k in keys]
+                    grants, new_carry = apportion_budget(
+                        remaining, demands, weights, carry
+                    )
+                    for k, g, c in zip(keys, grants, new_carry):
+                        self._lane_carry[k] = c  # _pop_lane drops it if emptied
+                        remaining -= self._pop_lane(k, g, batch, stale)
         for t in stale:
             # a canceled task may still hold a staging-gate reservation:
             # dropping it without unbinding would leak policy load accounting
@@ -258,6 +343,30 @@ class StreamingDispatcher:
             # policy locks nest under the dispatcher's, never the reverse)
             self._release_reservation(t)
         return self._stage_gate(batch)
+
+    def _pop_lane(
+        self, key: tuple[str, str], k: int, batch: list[Task], stale: list[Task]
+    ) -> int:
+        """Pop up to ``k`` tasks from one lane, shallow-first (callers hold
+        self._lock).  Returns the number popped (stale/canceled tasks count
+        against the grant: their slot was budgeted this round either way)."""
+        heap = self._lanes.get(key)
+        popped = 0
+        while heap and popped < k:
+            _, _, t = heapq.heappop(heap)
+            self._queued.discard(t.uid)
+            self._npending -= 1
+            self._class_pending[key[0]] -= 1
+            popped += 1
+            (stale if t.final else batch).append(t)
+        if heap is not None and not heap:
+            del self._lanes[key]
+            self._lane_carry.pop(key, None)  # an empty lane banks no deficit
+        return popped
+
+    def _tenant_weight(self, tenant: str) -> float:
+        admission = self.broker.admission
+        return admission.weight(tenant) if admission is not None else 1.0
 
     # -- the staging gate (core/staging.py) ------------------------------
     def _stage_gate(self, batch: list[Task]) -> list[Task]:
@@ -320,7 +429,7 @@ class StreamingDispatcher:
                     ready.append(t)  # replica hit: free read, dispatch now
                     continue
                 with self._lock:
-                    self._blocked[t.uid] = t
+                    self._park_locked(t)
                 gen = t.staging_attempts  # pins callbacks to THIS round
                 staging.stage_task(
                     t, name, lambda ok, t=t, g=gen: self._staged(t, ok, g)
@@ -328,9 +437,21 @@ class StreamingDispatcher:
             except Exception:
                 self.trace.add("stage_gate_error")
                 with self._lock:  # the failure path assumes blocked membership
-                    self._blocked.setdefault(t.uid, t)
+                    self._park_locked(t)
                 self._staged(t, False, t.staging_attempts)
         return ready
+
+    def _park_locked(self, t: Task) -> None:
+        # callers hold self._lock.  A re-park of an already-parked task (the
+        # gate's exception path) keeps the ORIGINAL stamp: the task has been
+        # waiting since then, and deferred_demand should decay it as such.
+        if t.uid not in self._blocked:
+            self._blocked[t.uid] = t
+            self._blocked_at[t.uid] = get_clock().now()
+
+    def _unpark_locked(self, uid: str) -> None:
+        self._blocked.pop(uid, None)
+        self._blocked_at.pop(uid, None)
 
     def _staged(self, t: Task, ok: bool, gen: int) -> None:
         """Stage-in barrier resolved (may run on a clock thread).  ``gen``
@@ -343,7 +464,7 @@ class StreamingDispatcher:
             return  # stale callback from a superseded staging round
         if t.final:  # canceled while its bytes were in flight
             with self._lock:
-                self._blocked.pop(t.uid, None)
+                self._unpark_locked(t.uid)
             self._release_reservation(t)
             return
         if ok:
@@ -352,7 +473,7 @@ class StreamingDispatcher:
             # flash _idle (drain()/autoscaler demand would misread it)
             self.enqueue([t])  # reservation rides along to bind_bulk
             with self._lock:
-                self._blocked.pop(t.uid, None)
+                self._unpark_locked(t.uid)
             return
         # transfer failed (site died / dataset lost / input never declared):
         # release the gate's reservation and re-gate against the surviving
@@ -371,7 +492,7 @@ class StreamingDispatcher:
             # retry would enqueue into a loop that will never pop it and
             # leave the future unresolved forever
             with self._lock:
-                self._blocked.pop(t.uid, None)
+                self._unpark_locked(t.uid)
             self._fail_task(
                 t, StagingError(f"task {t.uid}: staging failed for {t.inputs}")
             )
@@ -393,7 +514,7 @@ class StreamingDispatcher:
                 return  # stop() swept this timer: it owns the task's fate
             if self._stop.is_set():
                 with self._lock:
-                    self._blocked.pop(t.uid, None)
+                    self._unpark_locked(t.uid)
                 self._fail_task(
                     t, StagingError(f"task {t.uid}: dispatcher stopped during staging retry")
                 )
@@ -402,7 +523,7 @@ class StreamingDispatcher:
             # the staging success path)
             self.enqueue([t])
             with self._lock:
-                self._blocked.pop(t.uid, None)
+                self._unpark_locked(t.uid)
             if self._stop.is_set() and not t.done():
                 # stop() raced past our registry claim (we popped ourselves
                 # before its sweep, then it set _stop): the loop may already
@@ -529,14 +650,22 @@ class StreamingDispatcher:
             pass
 
     # -- metrics ---------------------------------------------------------
+    def _finite_pressure(self) -> Optional[float]:
+        """queue_pressure() for JSON consumers: the zero-supply ``inf``
+        sentinel becomes None (no finite pressure is honest there)."""
+        p = self.queue_pressure()
+        return round(p, 3) if math.isfinite(p) else None
+
     def stats(self) -> dict:
         return {
             "batches": self.batches,
             "tasks_dispatched": self.tasks_dispatched,
             "mean_batch_size": round(self.tasks_dispatched / max(self.batches, 1), 2),
             "pending": self.pending(),
+            "pending_by_class": self.pending_by_class(),
+            "lanes": len(self._lanes),
             "staging_blocked": self.stalled_on_staging(),
-            "queue_pressure": round(self.queue_pressure(), 3),
+            "queue_pressure": self._finite_pressure(),
             "incoming_slots": self.broker.incoming_slots(),
             "retry_backoffs": self.retry_backoffs,
             "loop_errors": self.loop_errors,

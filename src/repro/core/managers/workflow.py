@@ -252,6 +252,18 @@ class WorkflowManager:
                 by_uid[t.uid] = (wf, t)
                 remaining[t.uid] = set(wf.deps[t.uid])
 
+        # multi-tenant front door: admit the WHOLE run up front, in one
+        # all-or-nothing call.  Mid-DAG admission would reject inside a
+        # future done-callback — where an AdmissionError has no caller to
+        # propagate to and a half-run workflow no clean abort — so the
+        # manager charges every task before the first frontier dispatch;
+        # the per-frontier dispatch()/submit() admit gates then see
+        # already-admitted tasks and pass them through unchanged.  Raises
+        # AdmissionError here, before any callback is wired or task sent.
+        admission = getattr(self.broker, "admission", None)
+        if admission is not None:
+            admission.admit([t for _, t in by_uid.values()])
+
         def on_done(fut_task: Task):
             def cb(fut):
                 wf, _ = by_uid[fut_task.uid]

@@ -60,6 +60,74 @@ class NoEligibleProvider(RuntimeError):
         )
 
 
+def apportion_budget(
+    budget: int,
+    demands: list[int],
+    weights: list[float],
+    carry: Optional[list[float]] = None,
+) -> tuple[list[int], list[float]]:
+    """Split an integer batch budget across lanes in proportion to weight —
+    the dispatcher's lane-aware backfill sizing (core/dispatcher.py).
+
+    Weighted largest-remainder apportionment with carried deficits: each
+    lane's ideal share is ``budget * w_i / W`` plus whatever fraction it was
+    shorted last round, so over consecutive rounds every nonzero-weight lane
+    with standing demand converges on its exact proportional share — a
+    weight-1 lane next to a weight-100 lane is *slowed*, never starved
+    (tests/test_tenants.py proves this as a property).  Surplus from lanes
+    whose demand is smaller than their share re-apportions to the rest;
+    zero-weight lanes only see budget no weighted lane wants.
+
+    Returns ``(grants, new_carry)``; grants[i] <= demands[i] and
+    sum(grants) <= budget always hold.  ``new_carry`` is the deficit to pass
+    back next round — callers reset a lane's carry when it empties.
+    """
+    n = len(demands)
+    assert len(weights) == n
+    new_carry = [0.0] * n if carry is None else [max(0.0, c) for c in carry]
+    grants = [0] * n
+    remaining = max(0, int(budget))
+    while remaining > 0:
+        active = [i for i in range(n) if demands[i] > grants[i] and weights[i] > 0]
+        if not active:
+            # only weightless lanes still have demand: plain round-robin
+            idle = [i for i in range(n) if demands[i] > grants[i]]
+            if not idle:
+                break
+            for i in idle:
+                if remaining <= 0:
+                    break
+                grants[i] += 1
+                remaining -= 1
+            continue
+        total_w = sum(weights[i] for i in active)
+        round_budget = remaining
+        allotted = 0
+        for i in active:
+            share = round_budget * weights[i] / total_w + new_carry[i]
+            whole = min(int(share), demands[i] - grants[i], remaining - allotted)
+            grants[i] += whole
+            allotted += whole
+            if demands[i] > grants[i]:
+                # shorted (by rounding, its demand cap, or budget exhaustion):
+                # carry the deficit so next round repays it first.  Bounded
+                # by the round budget, so a long-starved lane cannot bank an
+                # unbounded claim and then monopolize a whole batch.
+                new_carry[i] = min(float(round_budget), share - whole)
+            else:
+                new_carry[i] = 0.0  # satisfied: a drained lane banks nothing
+        remaining -= allotted
+        if remaining > 0 and allotted == 0:
+            # every share rounded to zero (tiny budget, many lanes): the
+            # largest accumulated deficit wins one slot — this is what makes
+            # starvation impossible even at budget == 1
+            best = max(active, key=lambda i: (new_carry[i], weights[i]))
+            grants[best] += 1
+            new_carry[best] = max(0.0, new_carry[best] - 1.0)
+            remaining -= 1
+    return grants, new_carry
+
+
 class EligibleTargets(list):
     """An eligibility-validated target list tagged with the (topology
     version, capacity signature) it was computed for — the key stateful

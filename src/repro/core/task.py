@@ -37,6 +37,10 @@ class TaskState(str, Enum):
 
 FINAL_STATES = {TaskState.DONE, TaskState.FAILED, TaskState.CANCELED}
 
+# SLO classes, in strict drain-priority order: the dispatcher empties every
+# "interactive" lane before any "batch" lane sees budget (core/dispatcher.py)
+SLO_CLASSES = ("interactive", "batch")
+
 LEGAL = {
     TaskState.NEW: {TaskState.BOUND, TaskState.CANCELED},
     TaskState.BOUND: {TaskState.PARTITIONED, TaskState.BOUND, TaskState.CANCELED},
@@ -81,9 +85,12 @@ class Task(Future):
         max_retries: int = 2,
         inputs: Optional[list[str]] = None,
         outputs: Optional[dict[str, float]] = None,
+        tenant: str = "default",
+        slo_class: str = "batch",
     ):
         super().__init__()
         assert kind in ("noop", "callable", "compute", "sleep"), kind
+        assert slo_class in SLO_CLASSES, slo_class
         self.uid = _ids.next()
         self.kind = kind
         self.fn = fn
@@ -120,6 +127,17 @@ class Task(Future):
         # staging-stalled retries from demand without double-discounting
         # first-time tasks (which are in neither the ready heap nor backlog)
         self.in_submission: bool = False
+        # multi-tenant front door (core/admission.py + the dispatcher's
+        # per-tenant lanes): ``tenant`` keys rate limits / queue bounds /
+        # fair-share weights, ``slo_class`` picks the priority lane
+        # ("interactive" preempts queued "batch" backfill).  ``admitted``
+        # flips once the task passes admission (or is exempt: internal
+        # requeues re-enter without being re-charged); ``admission_held``
+        # marks a held queue slot and is cleared exactly once on release.
+        self.tenant = tenant
+        self.slo_class = slo_class
+        self.admitted: bool = False
+        self.admission_held: bool = False
         self.trace = Trace()
         self._state_lock = threading.RLock()
         self._tstate = TaskState.NEW
@@ -217,4 +235,6 @@ def describe(task: Task) -> dict:
         "retries": task.retries,
         "inputs": list(task.inputs),
         "outputs": dict(task.outputs),
+        "tenant": task.tenant,
+        "slo_class": task.slo_class,
     }

@@ -17,13 +17,22 @@ from repro.scenarios.spec import (
     ElasticDecl,
     ProviderDecl,
     ScenarioSpec,
+    TenantDecl,
     TrafficSpec,
 )
 
+# fair-share weights only (no rate limits: preset traffic is admitted in one
+# up-front bulk call per run, which a rate limit would reject).  ``serve`` is
+# the interactive tenant — its lane preempts queued batch work regardless of
+# weight; the weights shape the batch-lane split between facts and train.
+_TENANTS = [
+    TenantDecl(name="serve", weight=2.0),
+    TenantDecl(name="facts", weight=2.0),
+    TenantDecl(name="train", weight=1.0),
+]
 
-def _fleet(
-    concurrency: int, burst_max: int, burst_latency_s: float, burst_min: int = 0
-):
+
+def _fleet(concurrency: int, burst_max: int, burst_latency_s: float):
     providers = [
         ProviderDecl(name="jet2", platform="cloud", concurrency=concurrency),
         ProviderDecl(name="chi", platform="cloud", concurrency=concurrency),
@@ -40,7 +49,6 @@ def _fleet(
             template="burst",
             platform="cloud",
             concurrency=concurrency,
-            min_instances=burst_min,
             max_instances=burst_max,
             latency_s=burst_latency_s,
         )
@@ -56,6 +64,7 @@ def searise_smoke(seed: int = 0) -> ScenarioSpec:
         seed=seed,
         providers=providers,
         elastic=elastic,
+        tenants=list(_TENANTS),
         traffic=TrafficSpec(
             facts_members=24,
             train_jobs=2,
@@ -91,20 +100,19 @@ def searise_smoke(seed: int = 0) -> ScenarioSpec:
 def searise_at_scale(seed: int = 0) -> ScenarioSpec:
     """The ISSUE's acceptance scenario: 1024 FACTS members + train/serve
     traffic, four correlated fault events including a whole-site outage and
-    a cloud<->HPC partition, zero failed tasks, inflation <= 1.5x."""
-    # burst_min keeps a warm elastic floor: tasks parked on stage-in are
-    # (correctly) not autoscaler demand, so during the partition the pool
-    # would otherwise drain idle burst instances and the post-fault herd
-    # would wait out a re-acquisition ramp — a timing-dependent tail that
-    # makes the chaos makespan bimodal under load
-    providers, elastic = _fleet(
-        concurrency=8, burst_max=4, burst_latency_s=15.0, burst_min=2
-    )
+    a cloud<->HPC partition, zero failed tasks, inflation <= 1.5x.
+
+    No warm elastic floor: tasks parked on stage-in now register as decayed
+    deferred demand (Dispatcher.deferred_demand), so the autoscaler holds
+    burst capacity through a link partition on the signal itself instead of
+    the old ``min_instances=2`` workaround."""
+    providers, elastic = _fleet(concurrency=8, burst_max=4, burst_latency_s=15.0)
     return ScenarioSpec(
         name="searise-at-scale",
         seed=seed,
         providers=providers,
         elastic=elastic,
+        tenants=list(_TENANTS),
         traffic=TrafficSpec(
             facts_members=1024,
             train_jobs=6,

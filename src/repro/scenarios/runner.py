@@ -132,6 +132,8 @@ def build_broker(spec: ScenarioSpec) -> Hydra:
         # write-through stage-out: a whole-site outage must not take an
         # intermediate dataset's last copy with it (core/staging.py)
         staging_mirror_outputs=True,
+        # multi-tenant front door: weighted-fair lanes + SLO classes
+        tenants=[t.to_core() for t in spec.tenants] or None,
     )
     for p in spec.providers:
         h.register_provider(p.to_core())

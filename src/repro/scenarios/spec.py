@@ -19,7 +19,32 @@ from repro.core.chaos import (
     QuarantineStorm,
     SiteOutage,
 )
+from repro.core.admission import TenantSpec
 from repro.core.provider import ProviderSpec
+
+
+@dataclass
+class TenantDecl:
+    """One tenant at the broker's front door (core/admission.py): fair-share
+    weight plus optional rate limit and queue bound.  ``None`` for rate /
+    max_queued means unlimited — scenario presets declare weights only, so
+    the bulk up-front workflow admission is never rejected and fairness
+    still shapes the drain order."""
+
+    name: str
+    weight: float = 1.0
+    rate: Optional[float] = None  # admissions/s (token-bucket refill)
+    burst: Optional[float] = None  # bucket depth (default: rate)
+    max_queued: Optional[int] = None  # bound on admitted-but-unfinished
+
+    def to_core(self) -> TenantSpec:
+        return TenantSpec(
+            name=self.name,
+            rate=self.rate,
+            burst=self.burst,
+            max_queued=self.max_queued,
+            weight=self.weight,
+        )
 
 
 @dataclass
@@ -134,6 +159,7 @@ class ScenarioSpec:
     providers: list[ProviderDecl] = field(default_factory=list)
     elastic: list[ElasticDecl] = field(default_factory=list)
     traffic: TrafficSpec = field(default_factory=TrafficSpec)
+    tenants: list[TenantDecl] = field(default_factory=list)
     chaos: list[ChaosDecl] = field(default_factory=list)
     # broker shape
     tasks_per_pod: int = 16
@@ -152,6 +178,10 @@ class ScenarioSpec:
         d = dict(d)
         d["providers"] = [ProviderDecl(**p) for p in d.get("providers", [])]
         d["elastic"] = [ElasticDecl(**e) for e in d.get("elastic", [])]
+        d["tenants"] = [
+            t if isinstance(t, TenantDecl) else TenantDecl(**t)
+            for t in d.get("tenants", [])
+        ]
         traffic = d.get("traffic", {})
         if isinstance(traffic, dict):
             traffic = dict(traffic)

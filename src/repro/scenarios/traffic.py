@@ -40,6 +40,9 @@ def facts_ensemble(
     register_forcing(registry)
     pre_s, fit_s, proj_s, post_s = durations
     res = Resources(cpus=1, memory_mb=2048)
+    # multi-tenant front door: the ensemble is throughput work — a "facts"
+    # batch lane the serve tenant's interactive lane preempts in the queue
+    lane = dict(tenant="facts", slo_class="batch")
     wfs = []
     for i in range(n_members):
         wf = Workflow(f"{prefix}.facts.{i:05d}")
@@ -51,6 +54,7 @@ def facts_ensemble(
                 resources=res,
                 inputs=[FORCING_DATASET],
                 outputs={f"{base}/pre": STAGE_MB["pre"]},
+                **lane,
             )
         )
         fit = wf.add(
@@ -60,6 +64,7 @@ def facts_ensemble(
                 resources=res,
                 inputs=[f"{base}/pre"],
                 outputs={f"{base}/fit": STAGE_MB["fit"]},
+                **lane,
             ),
             deps=[pre],
         )
@@ -70,6 +75,7 @@ def facts_ensemble(
                 resources=res,
                 inputs=[f"{base}/pre", f"{base}/fit"],
                 outputs={f"{base}/proj": STAGE_MB["proj"]},
+                **lane,
             ),
             deps=[fit],
         )
@@ -80,6 +86,7 @@ def facts_ensemble(
                 resources=res,
                 inputs=[f"{base}/proj"],
                 outputs={f"{base}/result": STAGE_MB["result"]},
+                **lane,
             ),
             deps=[proj],
         )
@@ -98,6 +105,7 @@ def train_traffic(
     corpus = f"{prefix}/train/corpus"
     registry.add(corpus, TRAIN_CORPUS_MB, sites=["shared"], pinned=True)
     res = Resources(cpus=4, memory_mb=8192)
+    lane = dict(tenant="train", slo_class="batch")
     wfs = []
     for j in range(n_jobs):
         wf = Workflow(f"{prefix}.train.{j:03d}")
@@ -112,6 +120,7 @@ def train_traffic(
                     resources=res,
                     inputs=inputs,
                     outputs={ckpt: TRAIN_CKPT_MB},
+                    **lane,
                 ),
                 deps=[prev_task] if prev_task is not None else None,
             )
@@ -130,13 +139,22 @@ def serve_traffic(
     """Waves of short independent requests against one pinned snapshot."""
     snapshot = f"{prefix}/serve/model-snapshot"
     registry.add(snapshot, SERVE_SNAPSHOT_MB, sites=["shared"], pinned=True)
+    # the latency-sensitive tenant: interactive requests preempt queued
+    # batch backfill in the dispatcher's lanes
+    lane = dict(tenant="serve", slo_class="interactive")
     res = Resources(cpus=1, memory_mb=1024)
     wfs = []
     for w in range(n_waves):
         wf = Workflow(f"{prefix}.serve.{w:03d}")
         for _ in range(tasks_per_wave):
             wf.add(
-                Task("sleep", duration=task_s, resources=res, inputs=[snapshot])
+                Task(
+                    "sleep",
+                    duration=task_s,
+                    resources=res,
+                    inputs=[snapshot],
+                    **lane,
+                )
             )
         wfs.append(wf)
     return wfs

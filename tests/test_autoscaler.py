@@ -14,6 +14,7 @@ import pytest
 
 from repro.core import Hydra, ProviderSpec, Task
 from repro.core.autoscaler import (
+    Autoscaler,
     LatencyModel,
     LaunchSpec,
     ProviderPool,
@@ -22,7 +23,7 @@ from repro.core.autoscaler import (
 )
 from repro.core.provider import ValidationError
 from repro.core.task import TaskState
-from repro.runtime.clock import virtual_time
+from repro.runtime.clock import get_clock, virtual_time
 
 
 from conftest import wait_until
@@ -488,4 +489,162 @@ def test_autoscaler_stop_withdraws_inflight_acquisitions():
         scaler.stop(wait=True)
         assert h.incoming_slots() == 0  # no orphaned pending records
         assert pool.counts()["never"]["pending"] == 0
+        h.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# Zero-supply pressure semantics + deferred parked demand
+# ---------------------------------------------------------------------------
+
+
+def test_zero_supply_pressure_is_inf_and_still_buys_capacity():
+    """Regression for the supply==0 degeneration: ``demand / max(supply, 1)``
+    read a 100k-task queue against a dead fleet as 'pressure 100000' — a
+    number that merely scaled with backlog.  The sentinel is now +inf, the
+    scale-out gate trips on it, and stats() stays JSON-safe (null)."""
+    import json
+
+    with virtual_time():
+        from repro.core.admission import TenantSpec
+
+        # no providers registered at all: supply is truly zero; the front
+        # door keeps the dispatch budget idle-gated (work waits in lanes)
+        h = Hydra(streaming=True, pod_store="memory", tenants=[TenantSpec(name="t")])
+        pool = ProviderPool(
+            [
+                LaunchSpec(
+                    template=cloud_template("burst", concurrency=4),
+                    latency=LatencyModel(distribution="fixed", mean_s=100_000.0),
+                    max_instances=2,
+                )
+            ]
+        )
+        scaler = Autoscaler(h, pool, warmup_ticks=1)  # not started: manual ticks
+        assert scaler.pressure() == 0.0  # no demand: 0.0 whatever the supply
+        h.dispatch([Task(kind="noop", tenant="t") for _ in range(500)])
+        assert wait_until(lambda: h.queue_depth() == 500)
+        assert scaler.pressure() == float("inf")
+        scaler._tick()  # warmup_ticks=1: the inf reading trips scale-out NOW
+        assert scaler.acquisitions >= 1
+        assert pool.counts()["burst"]["pending"] >= 1
+        stats = scaler.stats()
+        assert stats["last_pressure"] is None  # inf is not JSON: emitted as null
+        json.dumps(stats)
+        scaler.stop(wait=True)
+        h.shutdown(wait=True)
+
+
+def test_tripped_group_fleet_reads_as_infinite_pressure():
+    """A fleet whose every group member is breaker-OPEN has zero live slots:
+    queue_pressure must read +inf (the MOST pressured state), not the raw
+    pending count, and not a saturated-but-live finite value."""
+    with virtual_time():
+        h = Hydra(streaming=True, pod_store="memory")
+        group = h.register_group(
+            "g", [cloud_template("m1", concurrency=2), cloud_template("m2", concurrency=2)]
+        )
+        d = h.dispatcher()
+        assert d.queue_pressure() == 0.0
+        for m in group.member_names:
+            group.mark_down(m)
+        assert h.total_slots() == 0
+        h.dispatch([Task(kind="noop") for _ in range(64)])
+        assert wait_until(lambda: d.pending() > 0)
+        assert d.queue_pressure() == float("inf")
+        assert d.stats()["queue_pressure"] is None  # JSON-safe sentinel
+        h.shutdown(wait=True)
+
+
+def test_saturated_but_live_fleet_reads_finite_pressure():
+    with virtual_time(auto_advance=False) as clock:
+        from repro.core.admission import TenantSpec
+
+        # a front door keeps queued work in the dispatcher's lanes (budget
+        # gated on idle slots), so pending() is observable while saturated
+        h = Hydra(
+            streaming=True,
+            pod_store="memory",
+            batch_window=0.0,
+            tenants=[TenantSpec(name="t")],
+        )
+        h.register_provider(cloud_template("p", concurrency=2))
+        d = h.dispatcher()
+        # freeze the clock: the two sleeps occupy both slots until advanced
+        sleeps = [Task(kind="sleep", duration=60.0, tenant="t") for _ in range(2)]
+        h.dispatch(sleeps)
+        assert wait_until(lambda: h.idle_slots() == 0, timeout=10.0)
+        backlog = [Task(kind="noop", tenant="t") for _ in range(40)]
+        h.dispatch(backlog)
+        assert wait_until(lambda: d.pending() == 40)
+        p = d.queue_pressure()
+        assert p == 40.0  # finite raw pending: in-flight work frees slots
+        import math
+
+        assert math.isfinite(p)
+        # unfreeze: EVERYTHING (sleeps included) drains before shutdown —
+        # an executor thread still inside clock.sleep would wedge it
+        assert wait_until(
+            lambda: (
+                clock.advance(30.0),
+                all(t.done() for t in sleeps + backlog),
+            )[1],
+            timeout=30.0,
+        )
+        h.shutdown(wait=True)
+
+
+def test_interactive_pressure_gate_opens_scale_out():
+    """With ``interactive_scale_out_pressure`` set, interactive-lane depth
+    alone trips the scale-out path even when aggregate pressure is tame."""
+    with virtual_time(auto_advance=False):
+        from repro.core.admission import TenantSpec
+
+        h = Hydra(
+            streaming=True,
+            pod_store="memory",
+            batch_window=0.0,
+            tenants=[TenantSpec(name="serve")],
+        )
+        h.register_provider(cloud_template("p", concurrency=8))
+        pool = ProviderPool(
+            [
+                LaunchSpec(
+                    template=cloud_template("burst", concurrency=4),
+                    latency=LatencyModel(distribution="fixed", mean_s=100_000.0),
+                )
+            ]
+        )
+        scaler = Autoscaler(
+            h,
+            pool,
+            warmup_ticks=1,
+            scale_out_pressure=100.0,  # aggregate gate unreachable
+            interactive_scale_out_pressure=0.5,
+        )
+        # saturate the 8 slots with frozen sleeps, then queue interactive work
+        sleeps = [Task(kind="sleep", duration=60.0) for _ in range(8)]
+        h.dispatch(sleeps)
+        assert wait_until(lambda: h.idle_slots() == 0, timeout=10.0)
+        serve = [
+            Task(kind="noop", tenant="serve", slo_class="interactive")
+            for _ in range(16)
+        ]
+        h.dispatch(serve)
+        assert wait_until(
+            lambda: h.queue_depth_by_class().get("interactive", 0) >= 16
+        )
+        assert scaler.pressure() < 100.0
+        assert scaler.interactive_pressure() >= 0.5
+        scaler._tick()
+        assert scaler.acquisitions >= 1
+        scaler.stop(wait=True)
+        # unfreeze so the frozen sleeps and queued work drain before shutdown
+        clock = get_clock()
+        assert wait_until(
+            lambda: (
+                clock.advance(30.0),
+                all(t.done() for t in sleeps + serve),
+            )[1],
+            timeout=30.0,
+        )
         h.shutdown(wait=True)

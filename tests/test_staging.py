@@ -381,11 +381,18 @@ def test_registry_resize_keeps_capacity_accounting_consistent():
 
 
 # ---------------------------------------------------------------------------
-# Autoscaler: staging-stalled tasks are not demand
+# Autoscaler: staging-stalled tasks are decayed (not zero, not full) demand
 # ---------------------------------------------------------------------------
 
 
-def test_autoscaler_pressure_ignores_staging_stalled_tasks(tmp_path):
+def test_autoscaler_pressure_counts_parked_tasks_as_decayed_demand(tmp_path):
+    """Regression for the parked-demand blind spot: tasks parked on
+    stage-in used to contribute ZERO demand, so a data-heavy burst left the
+    fleet cold until the bytes landed — then every transfer completed into
+    an undersized pool (the at-scale preset papered over it with a
+    min_instances=2 warm floor).  Freshly parked tasks now count at ~full
+    weight, decaying exponentially as they age, so long-stuck transfers
+    stop buying capacity."""
     with virtual_time(auto_advance=False):
         h = Hydra(
             pod_store="memory",
@@ -406,7 +413,17 @@ def test_autoscaler_pressure_ignores_staging_stalled_tasks(tmp_path):
                         latency=cloud_startup())]
         )
         scaler = Autoscaler(h, pool)  # not started: we only read the signal
-        assert scaler.pressure() == 0.0  # stalled-on-bytes is not unmet demand
+        # freshly parked: ~8 slots of deferred demand against 2 live slots
+        fresh = scaler.pressure()
+        assert 3.5 <= fresh <= 4.0, fresh
+        # age the herd WITHOUT advancing the clock (that would fire the
+        # frozen transfer timers and unpark everyone): backdate the park
+        # stamps by 5*tau — the stuck herd decays to <1% of a slot each
+        with d._lock:
+            for uid in d._blocked_at:
+                d._blocked_at[uid] -= 300.0
+        aged = scaler.pressure()
+        assert aged < fresh * 0.01, (fresh, aged)
         h.shutdown(wait=True)
 
 
