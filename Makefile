@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging bench-sched bench-scenario bench-tenants bench-check
+.PHONY: test test-fast lint docs-check cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging bench-sched bench-scenario bench-tenants bench-events bench-check
 
 test:  ## tier-1 verify (ROADMAP.md)
 	$(PY) -m pytest -x -q
@@ -15,6 +15,9 @@ test-fast:  ## skip the slow/chaos end-to-end marks (the PR CI lane)
 lint:  ## what the CI lint job runs (needs ruff: pip install ruff)
 	ruff check src tests benchmarks
 	ruff format --check src
+
+docs-check:  ## docs lint: markdown links resolve, OBSERVABILITY.md <-> EVENTS in sync
+	$(PY) tools/docs_check.py
 
 cov:  ## tier-1 with the CI coverage floor (needs pytest-cov)
 	$(PY) -m pytest -x -q --cov=repro.core --cov-report=term --cov-fail-under=80
@@ -48,6 +51,9 @@ bench-scenario:  ## exp10 only: at-scale chaos scenario + structured report
 
 bench-tenants:  ## exp11 only: interactive p99 under a 100k-task bulk flood
 	$(PY) -m benchmarks.exp11_tenants --full
+
+bench-events:  ## exp12 only: event-bus emit/replay throughput + dispatch tax
+	$(PY) -m benchmarks.exp12_events --full
 
 bench-check:  ## smoke run + dispatch-throughput regression gate vs committed baseline
 	git show HEAD:artifacts/bench/BENCH_smoke.json > /tmp/bench_baseline.json

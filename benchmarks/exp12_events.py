@@ -1,0 +1,137 @@
+"""Experiment 12: event-bus overhead (core/events.py).
+
+The event-sourced control plane puts one ``EventBus.emit`` adjacent to
+every legacy counter increment on the broker's hot paths.  ``emit`` is a
+clock stamp + list append + one dict-reduce under a single lock, and the
+dispatcher pays it per BATCH (not per task), so the designed cost is noise
+against the ~87 us/task dispatch floor (exp9).  This experiment measures
+that claim directly rather than asserting it:
+
+  emit     - raw bus throughput: events/s for a hot single-threaded emit
+             loop (the per-event cost every instrumented site pays), with
+             and without a bounded HYDRA_EVENTS_BUFFER.
+  replay   - fold throughput: events/s re-deriving the metric views from a
+             serialized JSONL stream (the offline replay path).
+  dispatch - end-to-end tax: the exp9 smoke data arm (2k data-gravity
+             tasks, 32 providers) re-run as-is — every dispatch now emits —
+             reported as dispatch_tasks_per_s and the delta vs the
+             committed pre-events baseline in artifacts/bench/
+             BENCH_smoke.json (gated separately by check_bench.py).
+
+Strict mode (HYDRA_EVENTS_CHECK) is intentionally OFF here, as in CI
+benches: the cross-check is a test harness, not a production cost.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import time
+
+from repro.core.events import EventBus, replay_jsonl
+
+from benchmarks.common import RESULT_DIR, print_rows, write_csv
+
+BASELINE_JSON = os.path.join(RESULT_DIR, "BENCH_smoke.json")
+
+
+def _bench_emit(n_events: int, buffer: int = 0) -> dict:
+    bus = EventBus(strict=False, buffer=buffer)
+    t0 = time.perf_counter()
+    for i in range(n_events):
+        bus.emit("dispatch.batch", n=8)
+    dt = time.perf_counter() - t0
+    return {
+        "exp": "exp12",
+        "mode": f"emit_buf{buffer}" if buffer else "emit",
+        "n_events": n_events,
+        "wall_s": round(dt, 4),
+        "events_per_s": round(n_events / dt, 1),
+        "us_per_event": round(dt / n_events * 1e6, 3),
+    }
+
+
+def _bench_replay(n_events: int) -> dict:
+    bus = EventBus(strict=False)
+    for i in range(n_events):
+        bus.emit("task.complete", provider=f"p{i % 32}", failed=False)
+    buf = io.StringIO()
+    bus.dump_jsonl(buf)
+    lines = buf.getvalue().splitlines()
+    t0 = time.perf_counter()
+    view, header = replay_jsonl(lines)
+    dt = time.perf_counter() - t0
+    assert view.snapshot() == header["snapshot"], "replay diverged mid-bench"
+    return {
+        "exp": "exp12",
+        "mode": "replay",
+        "n_events": n_events,
+        "wall_s": round(dt, 4),
+        "events_per_s": round(n_events / dt, 1),
+        "us_per_event": round(dt / n_events * 1e6, 3),
+    }
+
+
+def _baseline_dispatch_tasks_per_s() -> float | None:
+    """The committed smoke gate value (pre- or post-events, whatever HEAD
+    carries) — the delta this experiment reports is vs that number."""
+    try:
+        with open(BASELINE_JSON) as f:
+            doc = json.load(f)
+    except OSError:
+        return None
+    for row in doc.get("rows", []):
+        if row.get("name") == "exp9_sched":
+            import re
+
+            m = re.search(r"dispatch_tasks_per_s=([0-9.]+)", row.get("derived", ""))
+            if m:
+                return float(m.group(1))
+    return None
+
+
+def _bench_dispatch(reps: int) -> dict:
+    # the exact exp9 smoke data arm: 2k data-gravity tasks, 32 providers
+    from benchmarks.exp9_sched import _best_of
+
+    n_tasks, n_providers = 2_000, 32
+    dt = _best_of(reps, n_tasks, n_providers, "data_gravity", 2048, 8, True)
+    row = {
+        "exp": "exp12",
+        "mode": "dispatch",
+        "n_events": n_tasks,
+        "wall_s": round(dt, 3),
+        "dispatch_tasks_per_s": round(n_tasks / dt, 1),
+        "us_per_task": round(dt / n_tasks * 1e6, 1),
+    }
+    base = _baseline_dispatch_tasks_per_s()
+    if base:
+        row["baseline_tasks_per_s"] = base
+        row["delta_vs_baseline"] = round(row["dispatch_tasks_per_s"] / base - 1.0, 4)
+    return row
+
+
+def run(emit_events: int = 200_000, replay_events: int = 100_000, reps: int = 2) -> list[dict]:
+    rows = [
+        _bench_emit(emit_events),
+        _bench_emit(emit_events, buffer=4096),
+        _bench_replay(replay_events),
+        _bench_dispatch(reps),
+    ]
+    write_csv("exp12_events", rows)
+    print_rows(rows)
+    return rows
+
+
+def main(full: bool = False, smoke: bool = False) -> list[dict]:
+    if smoke:
+        return run(emit_events=50_000, replay_events=25_000, reps=2)
+    if full:
+        return run(emit_events=1_000_000, replay_events=500_000, reps=3)
+    return run()
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(full="--full" in sys.argv, smoke="--smoke" in sys.argv)

@@ -75,6 +75,20 @@ def _exp11_summary(rows: list[dict]) -> str:
     )
 
 
+def _exp12_summary(rows: list[dict]) -> str:
+    emit = next(r for r in rows if r["mode"] == "emit")
+    replay = next(r for r in rows if r["mode"] == "replay")
+    disp = next(r for r in rows if r["mode"] == "dispatch")
+    delta = disp.get("delta_vs_baseline")
+    delta_s = f"{delta:+.3f}" if delta is not None else "n/a"
+    return (
+        f"exp12_events,{emit['us_per_event']},"
+        f"emit_events_per_s={emit['events_per_s']:.0f}"
+        f"_replay_events_per_s={replay['events_per_s']:.0f}"
+        f"_dispatch_delta={delta_s}"
+    )
+
+
 def _exp7_summary(rows: list[dict]) -> str:
     weak = [r for r in rows if r["mode"] == "weak"]
     elastic = [r for r in rows if r["mode"] == "elastic"]
@@ -116,6 +130,7 @@ def run_smoke() -> list[str]:
         exp9_sched,
         exp10_scenario,
         exp11_tenants,
+        exp12_events,
     )
 
     print("== Exp 1 (smoke): per-provider scaling ==")
@@ -147,6 +162,9 @@ def run_smoke() -> list[str]:
     print("== Exp 11 (smoke): multi-tenant front door (10k flood) ==")
     out.append(_exp11_summary(exp11_tenants.main(smoke=True)))
 
+    print("== Exp 12 (smoke): event-bus overhead (emit/replay/dispatch tax) ==")
+    out.append(_exp12_summary(exp12_events.main(smoke=True)))
+
     path = _write_bench_json("smoke", out)
     print(f"\nwrote {path}")
     return out
@@ -158,7 +176,7 @@ def run_all(full: bool) -> list[str]:
     from benchmarks import exp1_per_provider, exp2_cross_provider, exp3a_cross_platform
     from benchmarks import exp3b_heterogeneous, exp4_facts, exp5_groups, exp6_streaming
     from benchmarks import exp7_elastic, exp8_staging, exp9_sched, exp10_scenario
-    from benchmarks import exp11_tenants, kernels_bench, roofline_report
+    from benchmarks import exp11_tenants, exp12_events, kernels_bench, roofline_report
 
     print("== Exp 1: per-provider scaling (OVH/TH/TPT, MCPP vs SCPP) ==")
     r1 = exp1_per_provider.main(full)
@@ -205,6 +223,9 @@ def run_all(full: bool) -> list[str]:
 
     print("== Exp 11: multi-tenant front door (interactive p99 under flood) ==")
     out.append(_exp11_summary(exp11_tenants.main(full)))
+
+    print("== Exp 12: event-bus overhead (emit/replay/dispatch tax) ==")
+    out.append(_exp12_summary(exp12_events.main(full)))
 
     print("== Kernel micro-benchmarks ==")
     for name, us, derived in kernels_bench.main(full):

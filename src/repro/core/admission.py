@@ -150,11 +150,20 @@ class AdmissionController:
         self._specs: dict[str, TenantSpec] = {}
         self._buckets: dict[str, TokenBucket] = {}
         self._held: dict[str, int] = {}  # tenant -> admitted, unreleased tasks
-        # counters for stats()/benchmarks: rejections by (tenant, reason)
+        # counters for stats()/benchmarks: rejections by (tenant, reason).
+        # With an event bus attached these become the strict-mode ground
+        # truth; stats() itself reads the log-derived view (core/events.py)
         self.admitted = 0
         self.rejected: dict[tuple[str, str], int] = {}
+        self._events = None  # broker-owned EventBus, via attach_events()
         for spec in tenants or []:
             self.add_tenant(spec)
+
+    def attach_events(self, bus) -> None:
+        """Wire the broker's event bus: admission decisions become
+        admission.accept / admission.reject events and stats() turns into
+        a derived view over the log."""
+        self._events = bus
 
     def add_tenant(self, spec: TenantSpec) -> None:
         with self._lock:
@@ -218,6 +227,9 @@ class AdmissionController:
         # is registered only for tasks that actually hold a slot
         with self._lock:
             self.admitted += len(fresh)
+            if self._events is not None:
+                for tenant, group in by_tenant.items():
+                    self._events.emit("admission.accept", tenant=tenant, n=len(group))
         for tenant, group in by_tenant.items():
             for t in group:
                 t.admitted = True
@@ -239,6 +251,8 @@ class AdmissionController:
             for other, n, bucket in charged:
                 self._held[other] = max(0, self._held.get(other, 0) - n)
             self.rejected[(tenant, reason)] = self.rejected.get((tenant, reason), 0) + 1
+            if self._events is not None:
+                self._events.emit("admission.reject", tenant=tenant, reason=reason)
         for _, n, bucket in charged:
             if bucket is not None:
                 bucket.put(n)
@@ -262,13 +276,28 @@ class AdmissionController:
             return self._held.get(tenant, 0)
 
     def stats(self) -> dict:
+        """Dict-shaped adapter.  The admit/reject totals are the log-derived
+        view when a bus is attached (emission is adjacent to the legacy
+        increments, under this controller's lock, so the two never drift);
+        held/tenants are live gauges, not log folds."""
+        if self._events is not None:
+            view = self._events.view
+            admitted = int(view.get("hydra.admission.admitted"))
+            rejected = {
+                k: int(v)
+                for k, v in sorted(view.keyed_get("hydra.admission.rejected").items())
+            }
+        else:
+            with self._lock:
+                admitted = self.admitted
+                rejected = {
+                    f"{tenant}:{reason}": n
+                    for (tenant, reason), n in sorted(self.rejected.items())
+                }
         with self._lock:
             return {
                 "tenants": sorted(self._specs),
                 "held": dict(self._held),
-                "admitted": self.admitted,
-                "rejected": {
-                    f"{tenant}:{reason}": n
-                    for (tenant, reason), n in sorted(self.rejected.items())
-                },
+                "admitted": admitted,
+                "rejected": rejected,
             }

@@ -472,6 +472,9 @@ class Autoscaler:
         self.ticks += 1
         p = self.pressure()
         self.last_pressure = p
+        self.broker.events.emit(
+            "scale.tick", pressure=p if math.isfinite(p) else None
+        )
         if self.interactive_scale_out_pressure is not None and p < self.scale_out_pressure:
             # the per-class gate: interactive depth alone can force the
             # scale-out path even when aggregate pressure looks tame
@@ -552,6 +555,9 @@ class Autoscaler:
                 "released_at": None,
             }
         self.acquisitions += 1
+        self.broker.events.emit(
+            "acquire.begin", instance=spec.name, platform=spec.platform
+        )
         self.trace.add(f"acquire:{spec.name}:eta={eta:.1f}")
         call = clock.call_later(eta, lambda: self._arrive(launch, spec))
         with self._lock:
@@ -584,6 +590,7 @@ class Autoscaler:
             if row is not None:
                 row["arrived_at"] = get_clock().now()
         self.arrivals += 1
+        self.broker.events.emit("acquire.complete", instance=spec.name)
         self.trace.add(f"arrived:{spec.name}")
         # new capacity: wake the dispatcher so backfill sees it NOW
         self.broker._notify_capacity()
@@ -620,6 +627,7 @@ class Autoscaler:
             self._timers.pop(name, None)
             self._instance_launch.pop(name, None)
         self.aborts += 1
+        self.broker.events.emit("acquire.abort", instance=name)
         self.trace.add(f"abort:{name}")
         self.pool.note_gone(launch, name)
 
@@ -639,6 +647,7 @@ class Autoscaler:
             if row is not None:
                 row["released_at"] = get_clock().now()
         self.releases += 1
+        self.broker.events.emit("scale.release", instance=name)
 
     # -- metrics -----------------------------------------------------------
     def node_seconds(self, until: Optional[float] = None) -> float:
@@ -655,12 +664,17 @@ class Autoscaler:
         return total
 
     def stats(self) -> dict:
+        """Dict-shaped adapter: the decision counters are the log-derived
+        view over scale.*/acquire.* events (core/events.py); the legacy
+        accumulators stay as HYDRA_EVENTS_CHECK ground truth.  Pressure
+        and pool state are live gauges."""
+        view = self.broker.events.view
         return {
-            "ticks": self.ticks,
-            "acquisitions": self.acquisitions,
-            "arrivals": self.arrivals,
-            "releases": self.releases,
-            "aborts": self.aborts,
+            "ticks": int(view.get("hydra.scale.ticks")),
+            "acquisitions": int(view.get("hydra.scale.acquisitions")),
+            "arrivals": int(view.get("hydra.scale.arrivals")),
+            "releases": int(view.get("hydra.scale.releases")),
+            "aborts": int(view.get("hydra.scale.aborts")),
             # JSON-safe: the +inf zero-supply sentinel serializes as null
             "last_pressure": (
                 round(self.last_pressure, 3)

@@ -32,6 +32,7 @@ from typing import Optional
 
 from repro.core.admission import AdmissionController, TenantSpec
 from repro.core.dispatcher import StreamingDispatcher
+from repro.core.events import EventBus, EventsDivergence, next_log_path
 from repro.core.fault import BreakerState, StragglerWatchdog, clone_for_speculation
 from repro.core.group import GroupExhausted, ProviderGroup
 from repro.core.ledger import CapacityLedger, LedgerDivergence
@@ -150,6 +151,14 @@ class Hydra:
         self.ledger.attach(
             recompute=self._ledger_recompute, on_capacity_gain=self._notify_capacity
         )
+        # the event-sourced control plane (core/events.py): every counter the
+        # legacy stats dicts accumulate is also emitted as a structured event
+        # onto this bus, and the stats accessors are derived views over the
+        # log.  HYDRA_EVENTS_CHECK=1 (tests/conftest.py) cross-checks view vs
+        # legacy on every stats read and at shutdown; HYDRA_EVENTS_LOG dumps
+        # the replayable JSONL stream at shutdown (docs/OBSERVABILITY.md).
+        self.events = EventBus()
+        self.events.attach(self._events_recompute)
         self.store = make_store(pod_store, self.workdir)
         self.partitioning = partitioning
         self.tasks_per_pod = tasks_per_pod
@@ -166,6 +175,8 @@ class Hydra:
         self.admission: Optional[AdmissionController] = (
             AdmissionController(tenants) if tenants else None
         )
+        if self.admission is not None:
+            self.admission.attach_events(self.events)
         self._dispatcher: Optional[StreamingDispatcher] = None
         self.data = DataManager(os.path.join(self.workdir, "data"))
         # data-aware staging (core/staging.py): dataset registry + modeled
@@ -179,6 +190,7 @@ class Hydra:
             mirror_outputs=staging_mirror_outputs,
         )
         self.data.attach_registry(self.staging.registry)
+        self.staging.attach_events(self.events)
         self.policy.attach_staging(self.staging)
         self._managers: dict[str, object] = {}
         self._lock = threading.RLock()
@@ -235,6 +247,7 @@ class Hydra:
         ``tenants=`` constructor argument in application code."""
         if self.admission is None:
             self.admission = AdmissionController(tenants)
+            self.admission.attach_events(self.events)
         else:
             for spec in tenants:
                 self.admission.add_tenant(spec)
@@ -356,6 +369,7 @@ class Hydra:
 
     def _on_task_resolved(self, _fut) -> None:
         self.ledger.task_resolved()
+        self.events.emit("backlog.resolve")
 
     def _ledger_recompute(self) -> dict:
         """From-scratch ground truth for the strict cross-check: the same
@@ -394,8 +408,62 @@ class Hydra:
             "backlog": backlog,
         }
 
+    def _events_recompute(self) -> dict:
+        """Legacy-accumulator ground truth for HYDRA_EVENTS_CHECK: the flat
+        ``metric`` / ``metric:key`` mapping the log-derived view must agree
+        with.  Only wired subsystems contribute keys (no autoscaler ⇒ no
+        scale.* comparison), mirroring _ledger_recompute's lock discipline:
+        runs WITHOUT the bus lock."""
+        out: dict = {}
+        d = self._dispatcher
+        if d is not None:
+            out["hydra.dispatch.batches"] = d.batches
+            out["hydra.dispatch.tasks"] = d.tasks_dispatched
+            out["hydra.dispatch.retry_backoffs"] = d.retry_backoffs
+            out["hydra.dispatch.loop_errors"] = d.loop_errors
+        a = self.autoscaler
+        if a is not None:
+            out["hydra.scale.ticks"] = a.ticks
+            out["hydra.scale.acquisitions"] = a.acquisitions
+            out["hydra.scale.arrivals"] = a.arrivals
+            out["hydra.scale.releases"] = a.releases
+            out["hydra.scale.aborts"] = a.aborts
+        adm = self.admission
+        if adm is not None:
+            out["hydra.admission.admitted"] = adm.admitted
+            for (tenant, reason), n in list(adm.rejected.items()):
+                out[f"hydra.admission.rejected:{tenant}:{reason}"] = n
+        st, eng = self.staging, self.staging.engine
+        out["hydra.staging.stage_ins"] = st.stage_ins
+        out["hydra.staging.stage_outs"] = st.stage_outs
+        out["hydra.staging.stage_out_drops"] = st.stage_out_drops
+        out["hydra.staging.evacuated_mb"] = st.evacuated_mb
+        out["hydra.staging.mirrored_mb"] = st.mirrored_mb
+        out["hydra.staging.transfer_wait_s"] = st.transfer_wait_s
+        out["hydra.staging.transfers"] = eng.completed
+        out["hydra.staging.mb_moved"] = eng.mb_moved
+        out["hydra.staging.cache_hits"] = eng.cache_hits
+        out["hydra.staging.cold_reads"] = eng.cold_reads
+        out["hydra.staging.reroutes"] = eng.reroutes
+        out["hydra.staging.transfer_failures"] = eng.failures
+        out["hydra.staging.queue_wait_s"] = eng.queue_wait_s
+        out["hydra.staging.evictions"] = st.registry.evictions
+        for g in self.proxy.groups():
+            for row in g.stats():
+                member = row["member"]
+                if row["dispatched"]:
+                    out[f"hydra.group.dispatched:{member}"] = row["dispatched"]
+                if row["completed"]:
+                    out[f"hydra.group.completed:{member}"] = row["completed"]
+                if row["failed"]:
+                    out[f"hydra.group.failed:{member}"] = row["failed"]
+        return out
+
     def stream_stats(self) -> dict:
-        """Dispatcher-side metrics + total pipeline rounds (exp6)."""
+        """Dispatcher-side metrics + total pipeline rounds (exp6).  A
+        derived view over the event log; the dict shape is the legacy
+        adapter, strict mode cross-checks it against the log fold."""
+        self.events.maybe_check()
         stats = self._dispatcher.stats() if self._dispatcher else {}
         with self._lock:
             stats["n_submits"] = self.n_submits
@@ -406,6 +474,7 @@ class Hydra:
         """The data-movement story (core/staging.py): bytes moved, replica
         hits vs cold reads, eviction/re-route counts, transfer wait —
         benchmarks/exp8_staging.py compares these across placement arms."""
+        self.events.maybe_check()
         stats = self.staging.stats()
         stats["staging_blocked"] = self.staging_stalled()
         return stats
@@ -415,8 +484,16 @@ class Hydra:
         totals, and the per-class queue depths (empty when no front door)."""
         if self.admission is None:
             return {}
+        self.events.maybe_check()
         stats = self.admission.stats()
         stats["queue_by_class"] = self.queue_depth_by_class()
+        return stats
+
+    def events_stats(self) -> dict:
+        """Bus-level snapshot: event count, retained/dropped, strict-mode
+        divergence count, plus the full derived-metrics snapshot."""
+        stats = self.events.stats()
+        stats["metrics"] = self.events.snapshot()
         return stats
 
     # ------------------------------------------------------------------
@@ -484,6 +561,7 @@ class Hydra:
         if mgr is not None:
             mgr.shutdown(wait=False)
         self.ledger.remove(name)
+        self.events.emit("provider.deregister", provider=name, reason="rollback")
         try:
             self.proxy.deregister(name)
         except KeyError:
@@ -519,6 +597,7 @@ class Hydra:
     def scale_stats(self) -> dict:
         """One snapshot of the elastic state: live/incoming capacity, queue
         pressure inputs, and the autoscaler's own counters when attached."""
+        self.events.maybe_check()
         stats = {
             "n_providers": len(self.providers()),
             "idle_slots": self.idle_slots(),
@@ -598,6 +677,12 @@ class Hydra:
         self.data.register_site(spec.name)
         self.staging.register_site(spec.name, platform=spec.platform)
         self.ledger.upsert_direct(spec.name, max(1, spec.concurrency * spec.n_nodes))
+        self.events.emit(
+            "provider.register",
+            provider=spec.name,
+            slots=max(1, spec.concurrency * spec.n_nodes),
+            group=handle.group,
+        )
         return handle
 
     def register_group(
@@ -636,7 +721,7 @@ class Hydra:
             # capacity events flow through the group from here on: member
             # ledger rows replace the members' direct rows, and breaker
             # transitions invalidate the proxy's cached bind-target list
-            group.attach_runtime(self.ledger, self.proxy.bump_version)
+            group.attach_runtime(self.ledger, self.proxy.bump_version, events=self.events)
             # a group is ONE staging site: members share a group-local store
             # (the way the paper's platforms share a filesystem), so member
             # churn inside the group never moves bytes
@@ -652,6 +737,7 @@ class Hydra:
                 if mgr is not None:
                     mgr.shutdown(wait=False)
                 self.ledger.remove(member)
+                self.events.emit("provider.deregister", provider=member, reason="rollback")
                 try:
                     self.proxy.deregister(member)
                 except KeyError:
@@ -699,6 +785,11 @@ class Hydra:
                 orphans = self._collect_orphans(name)
                 self._rebind_and_resubmit(orphans, exclude=name)
         mgr.shutdown(wait=drain)
+        self.events.emit(
+            "provider.deregister",
+            provider=name,
+            reason="release" if deregister else ("drain" if drain else "outage"),
+        )
         if deregister:
             self.policy.forget(name)
             self.ledger.remove(name)
@@ -716,6 +807,7 @@ class Hydra:
     def group_rows(self) -> list[dict]:
         """Group-aware metrics: one row per group member (breaker state,
         trips, dispatched/completed/failed/outstanding, weight)."""
+        self.events.maybe_check()
         return [row for g in self.proxy.groups() for row in g.stats()]
 
     def manager(self, name: str):
@@ -833,6 +925,7 @@ class Hydra:
             # — a task re-entering through a later submission (rebind via the
             # staging gate) must not earn a second decrement.
             self.ledger.task_entered(len(entered))
+            self.events.emit("backlog.enter", n=len(entered))
             for t in entered:
                 t.add_done_callback(self._on_task_resolved)
         per_provider: dict[str, list[Pod]] = {}
@@ -994,10 +1087,14 @@ class Hydra:
             group = self.proxy.get_group(task.group)
         exc = getattr(task, "last_error", None) if failed else None
         if group is not None:
+            # grouped terminal states reach the bus via group.record_* so
+            # the member-keyed view stays adjacent to the legacy counters
             if failed:
                 group.record_failure(provider)
             else:
                 group.record_success(provider)
+        else:
+            self.events.emit("task.complete", provider=provider, failed=failed)
         if not failed:
             return
         if isinstance(exc, ProviderDown):  # _handle_*_down owns the outage transition
@@ -1042,13 +1139,17 @@ class Hydra:
             self.proxy.get_group(task.group).record_skip(provider)
         elif task.group is None:
             self._provider_load(provider, -1)
+            self.events.emit("task.skip", provider=provider)
 
     def _handle_provider_down(self, name: str):
         with self._lock:
             handle = self.proxy.get(name)
+            flipped = handle.healthy
             if handle.healthy:
                 handle.healthy = False
                 handle.trace.add("blacklisted")
+        if flipped:
+            self.events.emit("provider.blacklist", provider=name)
         with handle.load_lock:
             handle.outstanding = 0  # a dead provider owes nothing dispatchable
         self.ledger.deactivate(name)
@@ -1217,6 +1318,9 @@ class Hydra:
         self._dispatch.shutdown(wait=wait)
         self.staging.shutdown()
         self.store.cleanup()
+        log_base = os.environ.get("HYDRA_EVENTS_LOG", "")
+        if log_base:
+            self.events.dump_jsonl(next_log_path(log_base))
         if self.ledger.strict and self.ledger.divergences:
             # a strict-mode divergence may have fired inside a loop that
             # swallows exceptions (the dispatcher's lifeline handler):
@@ -1225,3 +1329,14 @@ class Hydra:
                 f"capacity ledger diverged {self.ledger.divergences}x "
                 f"during this broker's lifetime: {self.ledger.last_divergence}"
             )
+        if self.events.strict:
+            # the authoritative events cross-check runs here, at quiescence:
+            # every derived metric must equal its legacy accumulator, and any
+            # divergence recorded mid-run re-surfaces the same way the
+            # ledger's does
+            if self.events.divergences:
+                raise EventsDivergence(
+                    f"event views diverged {self.events.divergences}x during "
+                    f"this broker's lifetime: {self.events.last_divergence}"
+                )
+            self.events.check()

@@ -188,6 +188,7 @@ class ChaosEngine:
     def _record(self, kind: str, target: str, detail: dict) -> None:
         with self._lock:
             self.injected[kind] = self.injected.get(kind, 0) + 1
+            self.broker.events.emit("chaos.inject", kind=kind, target=target)
             self.log.append(
                 {
                     "t": round(get_clock().now(), 6),
@@ -328,10 +329,19 @@ class ChaosEngine:
 
     # -- metrics -------------------------------------------------------
     def stats(self) -> dict:
+        """Injection counts are the log-derived view over chaos.inject
+        events (the legacy dict stays as HYDRA_EVENTS_CHECK ground truth);
+        the rest are live gauges of this engine's plan state."""
+        injected = {
+            k: int(n)
+            for k, n in sorted(
+                self.broker.events.view.keyed_get("hydra.chaos.injected").items()
+            )
+        }
         with self._lock:
             return {
                 "events_planned": len(self.events),
-                "injected": dict(self.injected),
+                "injected": injected,
                 "preempted": len(self.preempted_uids),
                 "open_link_windows": self._open_windows,
                 "log_entries": len(self.log),

@@ -280,6 +280,7 @@ class StreamingDispatcher:
                 # recovery-path error must never kill the dispatcher thread.
                 # Back off so a persistent error cannot become a hot spin.
                 self.loop_errors += 1
+                self.broker.events.emit("dispatch.loop_error")
                 self.trace.add("loop_error")
                 self._stop.wait(0.05)
 
@@ -589,6 +590,7 @@ class StreamingDispatcher:
                     else:
                         self._fail_task(t, exc)  # surface the typed error
             self.retry_backoffs += 1
+            self.broker.events.emit("dispatch.retry")
             if placeable:
                 self.enqueue(placeable)
             if deferred:
@@ -599,6 +601,9 @@ class StreamingDispatcher:
             return
         self.batches += 1
         self.tasks_dispatched += len(batch)
+        # one event per BATCH, not per task: the log costs O(batches) on the
+        # exp9/exp11 hot path while the view still derives the task total
+        self.broker.events.emit("dispatch.batch", n=len(batch))
         self._consecutive_failures = 0
         self.trace.add(f"batch:{batch_id}:{len(batch)}:{len(sub.pods)}")
 
@@ -609,6 +614,7 @@ class StreamingDispatcher:
         RUNNING) are NOT requeued — they either finish there or re-enter
         through the broker's fault machinery."""
         self.retry_backoffs += 1
+        self.broker.events.emit("dispatch.retry")
         self._consecutive_failures += 1
         self.trace.add("dispatch_retry")
         # pipeline aborts before dispatch release the whole batch's load
@@ -657,18 +663,26 @@ class StreamingDispatcher:
         return round(p, 3) if math.isfinite(p) else None
 
     def stats(self) -> dict:
+        """Dict-shaped adapter over the broker's event log: the dispatch
+        counters are the log-derived view (core/events.py), folded from
+        dispatch.batch/retry/loop_error events emitted adjacent to the
+        legacy accumulators (which stay as HYDRA_EVENTS_CHECK ground
+        truth).  Queue depths and pressure are live gauges."""
+        view = self.broker.events.view
+        batches = int(view.get("hydra.dispatch.batches"))
+        tasks = int(view.get("hydra.dispatch.tasks"))
         return {
-            "batches": self.batches,
-            "tasks_dispatched": self.tasks_dispatched,
-            "mean_batch_size": round(self.tasks_dispatched / max(self.batches, 1), 2),
+            "batches": batches,
+            "tasks_dispatched": tasks,
+            "mean_batch_size": round(tasks / max(batches, 1), 2),
             "pending": self.pending(),
             "pending_by_class": self.pending_by_class(),
             "lanes": len(self._lanes),
             "staging_blocked": self.stalled_on_staging(),
             "queue_pressure": self._finite_pressure(),
             "incoming_slots": self.broker.incoming_slots(),
-            "retry_backoffs": self.retry_backoffs,
-            "loop_errors": self.loop_errors,
+            "retry_backoffs": int(view.get("hydra.dispatch.retry_backoffs")),
+            "loop_errors": int(view.get("hydra.dispatch.loop_errors")),
             "batch_window_s": self.batch_window,
             "max_batch": self.max_batch,
         }

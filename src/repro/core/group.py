@@ -161,6 +161,7 @@ class ProviderGroup:
         # bind-target list on breaker transitions
         self._ledger = None
         self._on_topology_change = None
+        self._events = None  # broker-owned EventBus (attach_runtime)
         # breaker config is remembered so members that JOIN a live group
         # (elastic scale-out, core/autoscaler.py) get identical protection
         self._failure_threshold = failure_threshold
@@ -195,15 +196,18 @@ class ProviderGroup:
         )
 
     # -- broker wiring (capacity ledger, core/ledger.py) -----------------
-    def attach_runtime(self, ledger, on_topology_change=None) -> None:
+    def attach_runtime(self, ledger, on_topology_change=None, events=None) -> None:
         """Wire the broker's CapacityLedger (and the proxy's bind-target
         cache invalidation) into this group's member events: dispatch/
         completion load deltas, membership churn, and every breaker
         transition become O(1) ledger updates, replacing the per-read
-        member scans the broker used to do."""
+        member scans the broker used to do.  ``events`` additionally puts
+        every member counter change and breaker transition on the broker's
+        event bus (core/events.py), making stats() a log-derived view."""
         with self._lock:
             self._ledger = ledger
             self._on_topology_change = on_topology_change
+            self._events = events
             members = list(self._members.values())
         for m in members:
             self._wire_member(m)
@@ -218,6 +222,10 @@ class ProviderGroup:
         def _on_transition(old, new, name=m.name):
             if self._ledger is not None:
                 self._ledger.set_counted(name, new != BreakerState.OPEN)
+            if self._events is not None:
+                self._events.emit(
+                    "breaker.transition", member=name, old=old.value, new=new.value
+                )
             cb = self._on_topology_change
             if cb is not None:
                 cb()
@@ -292,6 +300,10 @@ class ProviderGroup:
             m.outstanding += n_tasks
             m.dispatched += n_tasks
             self._ledger_load(member, n_tasks)
+            if self._events is not None:
+                self._events.emit(
+                    "group.dispatch", group=self.name, member=member, n=n_tasks
+                )
 
     # -- health feedback -------------------------------------------------
     def record_success(self, member: str) -> None:
@@ -302,6 +314,10 @@ class ProviderGroup:
             m.outstanding = max(0, m.outstanding - 1)
             m.completed += 1
             self._ledger_load(member, -1)
+            if self._events is not None:
+                self._events.emit(
+                    "group.complete", group=self.name, member=member, failed=False
+                )
         m.breaker.record_success()
 
     def record_failure(self, member: str) -> None:
@@ -315,6 +331,10 @@ class ProviderGroup:
             m.outstanding = max(0, m.outstanding - 1)
             m.failed += 1
             self._ledger_load(member, -1)
+            if self._events is not None:
+                self._events.emit(
+                    "group.complete", group=self.name, member=member, failed=True
+                )
         m.breaker.record_failure()
 
     def record_skip(self, member: str) -> None:
@@ -327,6 +347,8 @@ class ProviderGroup:
         with self._lock:
             m.outstanding = max(0, m.outstanding - 1)
             self._ledger_load(member, -1)
+            if self._events is not None:
+                self._events.emit("group.skip", group=self.name, member=member)
         m.breaker.release_probe()
 
     def record_straggler(self, member: str) -> None:
@@ -376,6 +398,13 @@ class ProviderGroup:
                 memory_mb=max(have.memory_mb, cap.memory_mb),
             )
         self._wire_member(member)  # converts its ledger row to a member row
+        if self._events is not None:
+            self._events.emit(
+                "group.member_join",
+                group=self.name,
+                member=handle.name,
+                slots=member.slots,
+            )
         self.trace.add(f"member_joined:{handle.name}")
         return member
 
@@ -386,6 +415,8 @@ class ProviderGroup:
             gone = self._members.pop(name, None) is not None
         if gone and self._ledger is not None:
             self._ledger.remove(name)
+        if gone and self._events is not None:
+            self._events.emit("group.member_leave", group=self.name, member=name)
         self.trace.add(f"member_removed:{name}")
 
     def breaker_state(self, member: str) -> BreakerState:
@@ -393,7 +424,11 @@ class ProviderGroup:
 
     # -- metrics ---------------------------------------------------------
     def stats(self) -> list[dict]:
-        """One metrics row per member (group-aware metrics, broker.py)."""
+        """One metrics row per member (group-aware metrics, broker.py).
+        The dispatched/completed/failed counters come straight from the
+        member accumulators (they double as HYDRA_EVENTS_CHECK ground
+        truth); the bus folds the same group.* events into its member-keyed
+        view, and strict mode asserts the two agree."""
         with self._lock:
             return [
                 {

@@ -100,6 +100,7 @@ class DatasetRegistry:
         self._tick = 0
         self._lock = threading.RLock()
         self.evictions = 0
+        self._events = None  # broker-owned EventBus (StagingService.attach_events)
         self.register_site(SHARED_SITE, platform=SHARED_SITE, capacity_mb=None)
 
     # -- sites ---------------------------------------------------------
@@ -219,6 +220,8 @@ class DatasetRegistry:
                     del s.replicas[victim]
                     s.used_mb -= self._datasets[victim].size_mb
                     self.evictions += 1
+                    if self._events is not None:
+                        self._events.emit("replica.evict", dataset=victim, site=site)
                     evicted.append(victim)
             self._tick += 1
             s.replicas[name] = self._tick
@@ -392,6 +395,13 @@ class TransferEngine:
         self.failures = 0
         self.reroutes = 0
         self.queue_wait_s = 0.0
+        self._events = None  # broker-owned EventBus (StagingService.attach_events)
+
+    def _emit(self, name: str, **attrs) -> None:
+        # callers hold self._lock, keeping each legacy increment and its
+        # event adjacent so float folds match the accumulators bit-for-bit
+        if self._events is not None:
+            self._events.emit(name, **attrs)
 
     # -- link lookup ---------------------------------------------------
     def link_model(self, src_site: str, dst_site: str) -> LinkModel:
@@ -425,6 +435,7 @@ class TransferEngine:
         transfer threads, so the increment must take the engine lock)."""
         with self._lock:
             self.cache_hits += 1
+            self._emit("transfer.hit", dataset=name, site=site)
         self.registry.touch(name, site)
 
     # -- the fetch API -------------------------------------------------
@@ -436,6 +447,7 @@ class TransferEngine:
         with self._lock:
             if self.registry.resident(name, dst):
                 self.cache_hits += 1
+                self._emit("transfer.hit", dataset=name, site=dst)
                 self.registry.touch(name, dst)
                 fire = True
             elif not self.registry.known(name):
@@ -444,6 +456,7 @@ class TransferEngine:
                 # surface on the task — never an exception that could unwind
                 # the dispatcher loop mid-batch
                 self.failures += 1
+                self._emit("transfer.fail", dataset=name, dst=dst)
                 fire = False
             else:
                 inflight = self._inflight.get((name, dst))
@@ -454,9 +467,11 @@ class TransferEngine:
                     src = self._best_source(name, dst)
                     if src is None:
                         self.failures += 1
+                        self._emit("transfer.fail", dataset=name, dst=dst)
                         fire = False
                     else:
                         self.cold_reads += 1
+                        self._emit("transfer.cold", dataset=name, dst=dst)
                         tr = Transfer(name, ds.size_mb, src, dst)
                         tr.waiters.append(on_done)
                         self._inflight[(name, dst)] = tr
@@ -483,6 +498,13 @@ class TransferEngine:
         tr.epoch += 1
         epoch = tr.epoch
         self.queue_wait_s += max(0.0, tr.started_at - tr.queued_at)
+        self._emit(
+            "transfer.start",
+            dataset=tr.dataset,
+            src=tr.src,
+            dst=tr.dst,
+            wait_s=max(0.0, tr.started_at - tr.queued_at),
+        )
         self._active.setdefault(tr.link, []).append(tr)
         self.trace.add(f"start:{tr.dataset}:{tr.src}->{tr.dst}:{duration:.3f}s")
         tr.call = clock.call_later(duration, lambda: self._complete(tr, epoch))
@@ -507,10 +529,18 @@ class TransferEngine:
                 # destination vanished or cannot fit even after eviction
                 tr.state = FAILED
                 self.failures += 1
+                self._emit("transfer.fail", dataset=tr.dataset, dst=tr.dst)
                 ok = False
             else:
                 self.mb_moved += tr.size_mb
                 self.completed += 1
+                self._emit(
+                    "transfer.done",
+                    dataset=tr.dataset,
+                    src=tr.src,
+                    dst=tr.dst,
+                    mb=tr.size_mb,
+                )
                 self.log.append(
                     {
                         "dataset": tr.dataset,
@@ -568,6 +598,7 @@ class TransferEngine:
                 if tr.dst == site or tr.dataset in lost:
                     tr.state = FAILED
                     self.failures += 1
+                    self._emit("transfer.fail", dataset=tr.dataset, dst=tr.dst)
                     self._inflight.pop((tr.dataset, tr.dst), None)
                     failed.append(tr)
                     continue
@@ -576,12 +607,16 @@ class TransferEngine:
                 if new_src is None:
                     tr.state = FAILED
                     self.failures += 1
+                    self._emit("transfer.fail", dataset=tr.dataset, dst=tr.dst)
                     self._inflight.pop((tr.dataset, tr.dst), None)
                     failed.append(tr)
                     continue
                 tr.src = new_src
                 tr.reroutes += 1
                 self.reroutes += 1
+                self._emit(
+                    "transfer.reroute", dataset=tr.dataset, src=new_src, dst=tr.dst
+                )
                 # a restart queues anew: without this, the next _start would
                 # re-count the original queue wait PLUS the whole aborted
                 # active period as queue wait
@@ -709,6 +744,22 @@ class StagingService:
         self.evacuated_mb = 0.0  # last-copy bytes saved by graceful drains
         self.mirrored_mb = 0.0  # write-through stage-out copies (chaos durability)
         self.transfer_wait_s = 0.0  # total task-observed stage-in wait
+        self._events = None  # broker-owned EventBus (attach_events)
+
+    def attach_events(self, bus) -> None:
+        """Wire the broker's event bus through the whole staging stack:
+        service-level stage-in/out accounting, engine transfer lifecycle,
+        and registry evictions all become structured events
+        (core/events.py), with every emission adjacent to its legacy
+        counter so HYDRA_EVENTS_CHECK can hold them bit-equal."""
+        self._events = bus
+        self.engine._events = bus
+        self.registry._events = bus
+
+    def _emit(self, name: str, **attrs) -> None:
+        # callers hold self._lock (same adjacency rule as the engine's)
+        if self._events is not None:
+            self._events.emit(name, **attrs)
 
     # -- site lifecycle ------------------------------------------------
     def register_site(
@@ -737,6 +788,7 @@ class StagingService:
         if moved:
             with self._lock:
                 self.evacuated_mb += moved
+                self._emit("stage.evacuate", site=site, mb=moved)
         return moved
 
     # -- placement scoring ---------------------------------------------
@@ -795,11 +847,14 @@ class StagingService:
         lock = threading.Lock()
         with self._lock:
             self.stage_ins += 1
+            self._emit("stage.in", task=task.uid, site=site, missing=len(missing))
         task.trace.add(f"stage_in_start:{site}:{len(missing)}")
 
         def finish(ok: bool) -> None:
             with self._lock:
-                self.transfer_wait_s += max(0.0, clock.now() - t0)
+                wait = max(0.0, clock.now() - t0)
+                self.transfer_wait_s += wait
+                self._emit("stage.wait", task=task.uid, wait_s=wait)
             task.trace.add("stage_in_done" if ok else "stage_in_failed")
             on_ready(ok)
 
@@ -838,6 +893,7 @@ class StagingService:
                 # the shared store instead of silently vanishing
                 with self._lock:
                     self.stage_out_drops += 1
+                    self._emit("stage.drop", dataset=name, site=site)
                 self.registry.place_replica(name, SHARED_SITE)
             if self.mirror_outputs and not self.registry.resident(name, SHARED_SITE):
                 try:
@@ -846,9 +902,12 @@ class StagingService:
                     pass  # shared store full of pinned data: best-effort
                 else:
                     with self._lock:
-                        self.mirrored_mb += self.registry.get(name).size_mb
+                        mb = self.registry.get(name).size_mb
+                        self.mirrored_mb += mb
+                        self._emit("stage.mirror", dataset=name, mb=mb)
             with self._lock:
                 self.stage_outs += 1
+                self._emit("stage.out", dataset=name, site=site, mb=size_mb)
         if task.outputs:
             task.trace.add(f"stage_out:{site}:{len(task.outputs)}")
 
@@ -856,30 +915,57 @@ class StagingService:
     def stats(self) -> dict:
         """Engine + stage-in/out counters.  Parked-task counts live with the
         dispatcher (the single owner of the blocked set): see
-        ``Hydra.staging_stats()``, which merges in ``staging_blocked``."""
+        ``Hydra.staging_stats()``, which merges in ``staging_blocked``.
+
+        With an event bus attached, every accumulated counter here is the
+        log-derived view (core/events.py); the legacy accumulators stay as
+        the HYDRA_EVENTS_CHECK ground truth.  Emission order matches
+        accumulation order (both under the engine/service locks), so even
+        the float sums are bit-identical.  active/queued transfers are live
+        gauges, never folds."""
         e = self.engine
-        with self._lock:
-            wait = self.transfer_wait_s
-            outs, drops = self.stage_outs, self.stage_out_drops
-            evac, mirrored = self.evacuated_mb, self.mirrored_mb
-        return {
-            "mb_moved": round(e.mb_moved, 3),
-            "transfers": e.completed,
-            "cache_hits": e.cache_hits,
-            "cold_reads": e.cold_reads,
-            "reroutes": e.reroutes,
-            "transfer_failures": e.failures,
-            "evictions": self.registry.evictions,
-            "queue_wait_s": round(e.queue_wait_s, 3),
-            "transfer_wait_s": round(wait, 3),
-            "active_transfers": e.active_transfers(),
-            "queued_transfers": e.queued_transfers(),
-            "stage_ins": self.stage_ins,
-            "stage_outs": outs,
-            "stage_out_drops": drops,
-            "evacuated_mb": round(evac, 3),
-            "mirrored_mb": round(mirrored, 3),
-        }
+        if self._events is not None:
+            v = self._events.view
+            counters = {
+                "mb_moved": round(v.get("hydra.staging.mb_moved"), 3),
+                "transfers": int(v.get("hydra.staging.transfers")),
+                "cache_hits": int(v.get("hydra.staging.cache_hits")),
+                "cold_reads": int(v.get("hydra.staging.cold_reads")),
+                "reroutes": int(v.get("hydra.staging.reroutes")),
+                "transfer_failures": int(v.get("hydra.staging.transfer_failures")),
+                "evictions": int(v.get("hydra.staging.evictions")),
+                "queue_wait_s": round(v.get("hydra.staging.queue_wait_s"), 3),
+                "transfer_wait_s": round(v.get("hydra.staging.transfer_wait_s"), 3),
+                "stage_ins": int(v.get("hydra.staging.stage_ins")),
+                "stage_outs": int(v.get("hydra.staging.stage_outs")),
+                "stage_out_drops": int(v.get("hydra.staging.stage_out_drops")),
+                "evacuated_mb": round(v.get("hydra.staging.evacuated_mb"), 3),
+                "mirrored_mb": round(v.get("hydra.staging.mirrored_mb"), 3),
+            }
+        else:
+            with self._lock:
+                wait = self.transfer_wait_s
+                outs, drops = self.stage_outs, self.stage_out_drops
+                evac, mirrored = self.evacuated_mb, self.mirrored_mb
+            counters = {
+                "mb_moved": round(e.mb_moved, 3),
+                "transfers": e.completed,
+                "cache_hits": e.cache_hits,
+                "cold_reads": e.cold_reads,
+                "reroutes": e.reroutes,
+                "transfer_failures": e.failures,
+                "evictions": self.registry.evictions,
+                "queue_wait_s": round(e.queue_wait_s, 3),
+                "transfer_wait_s": round(wait, 3),
+                "stage_ins": self.stage_ins,
+                "stage_outs": outs,
+                "stage_out_drops": drops,
+                "evacuated_mb": round(evac, 3),
+                "mirrored_mb": round(mirrored, 3),
+            }
+        counters["active_transfers"] = e.active_transfers()
+        counters["queued_transfers"] = e.queued_transfers()
+        return counters
 
     def shutdown(self) -> None:
         self.engine.shutdown()

@@ -69,6 +69,14 @@ class Clock:
     def now(self) -> float:
         raise NotImplementedError
 
+    def stamp(self) -> float:
+        """Lock-free best-effort ``now()`` for high-rate telemetry stamps
+        (the event bus calls this adjacent to every hot-path counter).  May
+        trail an in-flight advance by one tick; never goes backwards within
+        a thread.  Defaults to ``now()`` — clocks whose ``now()`` takes a
+        lock should override with an unsynchronized read."""
+        return self.now()
+
     def sleep(self, duration: float) -> None:
         raise NotImplementedError
 
@@ -150,6 +158,12 @@ class VirtualClock(Clock):
     def now(self) -> float:
         with self._cond:
             return self._now
+
+    def stamp(self) -> float:
+        # GIL-atomic float read; racing an advance yields the pre-advance
+        # instant, which is a valid (momentarily stale) observation — and
+        # skipping the cond keeps emit() off the clock's contended lock
+        return self._now
 
     def advance(self, dt: float) -> float:
         """Manually move time forward and wake any due sleepers/timers."""

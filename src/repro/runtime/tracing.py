@@ -88,6 +88,23 @@ class Metrics:
             **{f"phase_{k}_s": round(v, 6) for k, v in self.phases.items()},
         }
 
+    def otel(self) -> dict:
+        """The same row under the OTel-style metric names the event bus
+        uses (core/events.py, docs/OBSERVABILITY.md), so run-level metrics
+        and log-derived counters share one namespace in exported JSON."""
+        return {
+            "hydra.run.ovh_s": round(self.ovh, 6),
+            "hydra.run.th_tasks_per_s": round(self.th, 2),
+            "hydra.run.tpt_s": round(self.tpt, 6),
+            "hydra.run.ttx_s": round(self.ttx, 6),
+            "hydra.run.n_tasks": self.n_tasks,
+            "hydra.run.n_pods": self.n_pods,
+            **{
+                f"hydra.run.phase.{k}_s": round(v, 6)
+                for k, v in self.phases.items()
+            },
+        }
+
 
 def compute_metrics(run_trace: Trace, tasks: Iterable, pods: Iterable) -> Metrics:
     """Derive the paper's metrics from the broker run trace + task traces."""

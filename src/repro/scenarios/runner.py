@@ -29,6 +29,7 @@ from typing import Optional
 from repro.core.autoscaler import ProviderPool
 from repro.core.broker import Hydra
 from repro.core.chaos import ChaosEngine
+from repro.core.events import EventsDivergence
 from repro.core.ledger import LedgerDivergence
 from repro.core.managers.workflow import WorkflowManager
 from repro.runtime.clock import virtual_time
@@ -68,6 +69,9 @@ class ScenarioReport:
     scale: dict = field(default_factory=dict)
     chaos_stats: dict = field(default_factory=dict)
     ledger_error: Optional[str] = None
+    events_error: Optional[str] = None  # strict event-view divergence
+    n_bus_events: int = 0  # broker event-log length (core/events.py)
+    events_path: Optional[str] = None  # JSONL dump, when recording was asked
     stranded_blocked: int = 0
     stranded_retry_timers: int = 0
     pending_deadlines: int = 0
@@ -94,6 +98,9 @@ class ScenarioReport:
             "scale": self.scale,
             "chaos_stats": self.chaos_stats,
             "ledger_error": self.ledger_error,
+            "events_error": self.events_error,
+            "n_bus_events": self.n_bus_events,
+            "events_path": self.events_path,
             "stranded_blocked": self.stranded_blocked,
             "stranded_retry_timers": self.stranded_retry_timers,
             "pending_deadlines": self.pending_deadlines,
@@ -143,12 +150,18 @@ def build_broker(spec: ScenarioSpec) -> Hydra:
     return h
 
 
-def run_scenario(spec: ScenarioSpec, chaos: bool = True) -> ScenarioReport:
+def run_scenario(
+    spec: ScenarioSpec, chaos: bool = True, record_events: Optional[str] = None
+) -> ScenarioReport:
     """Execute one spec under a fresh VirtualClock; return the report.
 
     ``chaos=False`` is the no-chaos twin: identical fleet, traffic, and
     seeds, zero injected events — the makespan baseline the inflation
-    invariant compares against."""
+    invariant compares against.
+
+    ``record_events`` dumps the broker's full event log (core/events.py)
+    to that JSONL path once the run quiesces; replay it with
+    ``python -m repro.core.events replay <path>`` (docs/OBSERVABILITY.md)."""
     report = ScenarioReport(name=spec.name, seed=spec.seed, chaos_enabled=chaos)
     with virtual_time() as clock:
         h = build_broker(spec)
@@ -210,10 +223,16 @@ def run_scenario(spec: ScenarioSpec, chaos: bool = True) -> ScenarioReport:
         scale = h.scale_stats()
         scale.pop("pending_acquisitions", None)  # not JSON-stable
         report.scale = scale
+        report.n_bus_events = len(h.events)
+        if record_events is not None:
+            h.events.dump_jsonl(record_events)
+            report.events_path = record_events
         try:
             h.shutdown(wait=True)
         except LedgerDivergence as exc:
             report.ledger_error = str(exc)
+        except EventsDivergence as exc:
+            report.events_error = str(exc)
         d = h._dispatcher
         if d is not None:
             report.stranded_blocked = d.stalled_on_staging()

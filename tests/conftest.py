@@ -13,6 +13,12 @@ warnings.filterwarnings("ignore", category=DeprecationWarning)
 # raises LedgerDivergence on a persistent mismatch (core/ledger.py)
 os.environ.setdefault("HYDRA_LEDGER_CHECK", "1")
 
+# same harness for the event-sourced control plane (core/events.py): every
+# stats accessor — and every broker shutdown — cross-checks the log-derived
+# metric views against the legacy accumulators and raises EventsDivergence
+# on a persistent mismatch
+os.environ.setdefault("HYDRA_EVENTS_CHECK", "1")
+
 
 def wait_until(pred, timeout=15.0, poll=0.02):
     """Poll a predicate in REAL time (thread progress, not clock time) —

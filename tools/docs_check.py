@@ -1,0 +1,100 @@
+"""Docs lint: in-repo links resolve, and the observability docs cannot
+drift from the event taxonomy.
+
+Two checks, both wired into `make docs-check` and the CI lint job:
+
+1. **Links** — every relative markdown link target in the repo's tracked
+   `.md` files exists on disk (fragments stripped; `http(s)`/`mailto`
+   targets skipped).  A doc that names a file that was moved or renamed
+   fails the build instead of rotting.
+2. **Taxonomy sync** — the event table in `docs/OBSERVABILITY.md` and the
+   `EVENTS` registry in `src/repro/core/events.py` must describe the same
+   set of event names, in both directions: an event added to the code
+   without a docs row fails, and a documented event the code no longer
+   emits fails.
+
+Stdlib only; run as ``PYTHONPATH=src python tools/docs_check.py``.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OBSERVABILITY = os.path.join(REPO, "docs", "OBSERVABILITY.md")
+
+# [text](target) — excluding images is unnecessary (targets must exist
+# either way); inline code spans are not matched by this shape
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# a taxonomy-table row's first cell: | `subsystem.action` | ...
+_EVENT_ROW = re.compile(r"^\|\s*`([a-z_]+\.[a-z_]+)`\s*\|")
+
+
+def tracked_markdown() -> list[str]:
+    out = subprocess.run(
+        ["git", "ls-files", "*.md", "**/*.md"],
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    return sorted(set(out.stdout.split()))
+
+
+def check_links(md_files: list[str]) -> list[str]:
+    errors = []
+    for rel in md_files:
+        path = os.path.join(REPO, rel)
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:  # pure fragment: same-file anchor
+                continue
+            resolved = os.path.normpath(os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(resolved):
+                errors.append(f"{rel}: broken link -> {m.group(1)}")
+    return errors
+
+
+def check_taxonomy() -> list[str]:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.events import EVENTS
+
+    with open(OBSERVABILITY, encoding="utf-8") as fh:
+        documented = {
+            m.group(1) for line in fh if (m := _EVENT_ROW.match(line.strip()))
+        }
+    errors = []
+    for name in sorted(set(EVENTS) - documented):
+        errors.append(
+            f"docs/OBSERVABILITY.md: event `{name}` exists in "
+            "core/events.py but has no taxonomy-table row"
+        )
+    for name in sorted(documented - set(EVENTS)):
+        errors.append(
+            f"docs/OBSERVABILITY.md: documented event `{name}` does not "
+            "exist in core/events.py"
+        )
+    return errors
+
+
+def main() -> int:
+    md_files = tracked_markdown()
+    errors = check_links(md_files) + check_taxonomy()
+    for e in errors:
+        print(f"docs-check: {e}", file=sys.stderr)
+    if errors:
+        print(f"docs-check: {len(errors)} error(s)", file=sys.stderr)
+        return 1
+    print(f"docs-check: {len(md_files)} markdown files OK, taxonomy in sync")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
