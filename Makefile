@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint docs-check cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging bench-sched bench-scenario bench-tenants bench-events bench-check
+.PHONY: test test-fast lint docs-check cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging bench-sched bench-scenario bench-tenants bench-events bench-market bench-check
 
 test:  ## tier-1 verify (ROADMAP.md)
 	$(PY) -m pytest -x -q
@@ -54,6 +54,9 @@ bench-tenants:  ## exp11 only: interactive p99 under a 100k-task bulk flood
 
 bench-events:  ## exp12 only: event-bus emit/replay throughput + dispatch tax
 	$(PY) -m benchmarks.exp12_events --full
+
+bench-market:  ## exp13 only: spot-vs-on-demand cost + checkpoint storm recovery
+	$(PY) -m benchmarks.exp13_market --full
 
 bench-check:  ## smoke run + dispatch-throughput regression gate vs committed baseline
 	git show HEAD:artifacts/bench/BENCH_smoke.json > /tmp/bench_baseline.json

@@ -14,6 +14,13 @@ Gates:
   exp11_tenants.interactive_p99_ratio lower is better, plus a HARD absolute
                                      ceiling of 3.0 on the fresh run
   exp10_scenario.failed              HARD: must be exactly 0 in the fresh run
+  exp13_market.cost_ratio            HARD absolute ceiling 0.8: the spot mix
+                                     must beat all-on-demand dollars by >= 20%
+                                     while meeting the same makespan SLO
+  exp13_market.failed                HARD: zero failed tasks under the
+                                     preemption storm (checkpoint resumes)
+  exp13_market.reexec_frac           HARD ceiling 0.25: <= 25% of preempted
+                                     work re-executed after the storm
 
 A gated row missing from the *baseline* is skipped (first PR that adds the
 experiment); missing from the *fresh* run it is an error (the experiment
@@ -54,12 +61,26 @@ GATES = [
     Gate(row="exp11_tenants", metric="interactive_p99_ratio", higher_is_better=False),
 ]
 # hard invariants on the fresh run, independent of any baseline
-HARD_ZERO = [("exp10_scenario", "failed"), ("exp10_scenario", "violations")]
+HARD_ZERO = [
+    ("exp10_scenario", "failed"),
+    ("exp10_scenario", "violations"),
+    # the preemption storm must kill instances, never tasks; the spot mix
+    # must also meet the on-demand makespan SLO (slo_violations covers both
+    # market arms)
+    ("exp13_market", "failed"),
+    ("exp13_market", "slo_violations"),
+]
 # absolute ceilings on the fresh run: the relative gate above catches drift,
 # this catches a baseline that was already bad (a 2.9 -> 3.5 ratio would pass
 # a 30% drift check; an interactive p99 more than 3x its unloaded floor means
 # the SLO lanes are not actually isolating tenants)
-HARD_MAX = [("exp11_tenants", "interactive_p99_ratio", 3.0)]
+HARD_MAX = [
+    ("exp11_tenants", "interactive_p99_ratio", 3.0),
+    # the market's headline claims (ISSUE exp13): cheaper than on-demand by
+    # >= 20%, and write-behind checkpoints bound storm re-execution
+    ("exp13_market", "cost_ratio", 0.8),
+    ("exp13_market", "reexec_frac", 0.25),
+]
 
 
 def _rows(path: str) -> dict[str, str]:

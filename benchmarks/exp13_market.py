@@ -1,0 +1,195 @@
+"""Experiment 13: the resource market — cost-aware platform mix + checkpoint
+recovery under a preemption storm.
+
+The paper brokers platforms that differ in price and revocation risk, not
+just acquisition latency (§1, §4).  Three arms, identical workload:
+
+  ondemand   - all on-demand capacity ($1.00/slot-hr, ~stable).  The cost
+               and makespan baseline; its makespan (x a small margin)
+               defines the SLO the cheaper mixes must still meet.
+  spot_mix   - the MarketPlanner bids over cheap-but-hazardous spot
+               ($0.25/slot-hr, ~6 revocations/instance-hr modeled) with a
+               small on-demand fallback.  Claim: same makespan SLO at
+               <= 0.8x the on-demand dollar cost (gated in check_bench.py).
+  storm      - the spot mix with a TaskCheckpointer attached, under a
+               seeded preemption storm that kills >= 20% of the live spot
+               instances mid-run (site death under RUNNING tasks: the
+               _collect_orphans resume path).  Claims: ZERO failed tasks,
+               and <= 25% of preempted work re-executed (write-behind
+               checkpoints lose only the tail past the last interval).
+
+Everything runs under a VirtualClock with fixed acquisition latencies and
+seeded draws: same seed => same bid schedule, same victim set.
+"""
+from __future__ import annotations
+
+import math
+import random
+import time
+
+from repro.core import Hydra, LaunchSpec, ProviderPool, Task
+from repro.core.autoscaler import LatencyModel
+from repro.core.market import MarketPlanner, PreemptionHazard
+from repro.core.provider import ProviderSpec
+from repro.runtime.clock import get_clock, virtual_time
+
+from benchmarks.common import print_rows, write_csv
+
+SPOT_PRICE = 0.25  # $/slot-hr
+ONDEMAND_PRICE = 1.00
+SPOT_RATE = 6.0  # modeled revocations per instance-hour
+SLO_MARGIN = 1.25  # spot mix must land within this factor of on-demand
+
+
+def _launches(mode: str, max_instances: int) -> list[LaunchSpec]:
+    fixed = LatencyModel(distribution="fixed", mean_s=8.0)
+    ondemand = LaunchSpec(
+        template=ProviderSpec(name="ond", platform="cloud", concurrency=8),
+        min_instances=1,
+        max_instances=max_instances if mode == "ondemand" else 2,
+        latency=fixed,
+        price_per_slot_hour=ONDEMAND_PRICE,
+    )
+    if mode == "ondemand":
+        return [ondemand]
+    spot = LaunchSpec(
+        template=ProviderSpec(name="spot", platform="cloud", concurrency=8),
+        min_instances=0,
+        max_instances=max_instances,
+        latency=fixed,
+        price_per_slot_hour=SPOT_PRICE,
+        hazard=PreemptionHazard(rate_per_hour=SPOT_RATE),
+    )
+    return [spot, ondemand]
+
+
+def _run_arm(
+    mode: str,
+    n_tasks: int,
+    task_s: float = 12.0,
+    max_instances: int = 6,
+    storm_at_s: float = 0.0,
+    storm_kill_frac: float = 0.34,
+    seed: int = 1234,
+    real_timeout_s: float = 120.0,
+) -> dict:
+    """One arm under its own VirtualClock; returns the row for the table."""
+    with virtual_time():
+        h = Hydra(streaming=True, pod_store="memory", batch_window=0.002)
+        ckpt = None
+        if mode == "storm":
+            ckpt = h.enable_task_checkpoints(interval_s=1.0)
+        pool = ProviderPool(_launches(mode, max_instances), seed=seed)
+        planner = MarketPlanner(slo_target_s=60.0, seed=seed)
+        scaler = h.autoscale(
+            pool,
+            tick_s=1.0,
+            warmup_ticks=2,
+            cooldown_ticks=4,
+            scale_out_pressure=1.2,
+            max_concurrent_acquisitions=max_instances,
+            planner=planner,
+        )
+        tasks = [Task(kind="sleep", duration=task_s) for _ in range(n_tasks)]
+        t0 = get_clock().now()
+        h.dispatch(tasks)
+
+        storm_done = mode != "storm"
+        n_spot_live = n_killed = 0
+        rng = random.Random(seed)
+        deadline = time.monotonic() + real_timeout_s
+        while time.monotonic() < deadline:
+            if all(t.done() for t in tasks):
+                break
+            if not storm_done and get_clock().now() - t0 >= storm_at_s:
+                # the seeded storm: revoke >= storm_kill_frac of the live
+                # spot fleet at once (site death under RUNNING tasks)
+                storm_done = True
+                live = sorted(
+                    n for n in scaler.pool.live_instances()
+                    if n.startswith("spot")
+                )
+                n_spot_live = len(live)
+                victims = rng.sample(
+                    live, max(1, math.ceil(storm_kill_frac * len(live)))
+                ) if live else []
+                for name in victims:
+                    h.remove_provider(name, drain=False, deregister=False)
+                    scaler.note_provider_lost(name)
+                n_killed = len(victims)
+            time.sleep(0.02)
+        assert all(t.done() for t in tasks), f"exp13/{mode}: tasks did not drain"
+        failed = sum(1 for t in tasks if t.exception() is not None)
+        ends = [t.trace.last("exec_done") for t in tasks]
+        makespan = max(e for e in ends if e is not None) - t0
+        h.shutdown(wait=True)  # settles still-live instances into the ledger
+        report = planner.cost_report()
+        row = {
+            "mode": mode,
+            "n_tasks": n_tasks,
+            "makespan_s": round(makespan, 2),
+            "node_seconds": round(report["node_seconds"], 1),
+            "dollars": round(report["dollars"], 4),
+            "bids": report["bids"],
+            "bids_by_template": ";".join(
+                f"{k}:{v}" for k, v in sorted(report["bids_by_template"].items())
+            ),
+            "failed": failed,
+            "resumed": sum(1 for t in tasks if t.resumes > 0),
+            "retries_charged": sum(t.retries for t in tasks),
+        }
+        if mode == "storm":
+            stats = ckpt.stats()
+            row["spot_live_at_storm"] = n_spot_live
+            row["spot_killed"] = n_killed
+            row["reexecuted_s"] = round(stats["reexecuted_s"], 2)
+            row["preempted_work_s"] = round(stats["preempted_work_s"], 2)
+            row["reexec_frac"] = round(stats["reexec_frac"], 4)
+        return row
+
+
+def run(
+    n_tasks: int = 96,
+    task_s: float = 12.0,
+    max_instances: int = 6,
+    seed: int = 1234,
+    verbose: bool = True,
+) -> list[dict]:
+    ondemand = _run_arm("ondemand", n_tasks, task_s, max_instances, seed=seed)
+    spot = _run_arm("spot_mix", n_tasks, task_s, max_instances, seed=seed)
+    # storm lands mid-first-wave: capacity is up and most tasks are RUNNING
+    # past their first checkpoint interval
+    storm = _run_arm(
+        "storm",
+        n_tasks,
+        task_s,
+        max_instances,
+        storm_at_s=16.0,
+        seed=seed,
+    )
+    slo_s = SLO_MARGIN * ondemand["makespan_s"]
+    for row in (ondemand, spot, storm):
+        row["cost_ratio"] = round(
+            row["dollars"] / max(ondemand["dollars"], 1e-9), 4
+        )
+        row["slo_s"] = round(slo_s, 2)
+        row["slo_violations"] = int(row["makespan_s"] > slo_s)
+    rows = [ondemand, spot, storm]
+    write_csv("exp13_market", rows)
+    if verbose:
+        print_rows(rows)
+    return rows
+
+
+def main(full: bool = False, smoke: bool = False) -> list[dict]:
+    if smoke:
+        return run(n_tasks=48, max_instances=4)
+    if full:
+        return run(n_tasks=192, max_instances=8)
+    return run()
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(full="--full" in sys.argv, smoke="--smoke" in sys.argv)

@@ -89,6 +89,18 @@ def _exp12_summary(rows: list[dict]) -> str:
     )
 
 
+def _exp13_summary(rows: list[dict]) -> str:
+    spot = next(r for r in rows if r["mode"] == "spot_mix")
+    storm = next(r for r in rows if r["mode"] == "storm")
+    return (
+        f"exp13_market,{spot['n_tasks']},"
+        f"cost_ratio={spot['cost_ratio']:.4f}"
+        f"_failed={storm['failed']}"
+        f"_reexec_frac={storm['reexec_frac']:.4f}"
+        f"_slo_violations={spot['slo_violations'] + storm['slo_violations']}"
+    )
+
+
 def _exp7_summary(rows: list[dict]) -> str:
     weak = [r for r in rows if r["mode"] == "weak"]
     elastic = [r for r in rows if r["mode"] == "elastic"]
@@ -131,6 +143,7 @@ def run_smoke() -> list[str]:
         exp10_scenario,
         exp11_tenants,
         exp12_events,
+        exp13_market,
     )
 
     print("== Exp 1 (smoke): per-provider scaling ==")
@@ -165,6 +178,9 @@ def run_smoke() -> list[str]:
     print("== Exp 12 (smoke): event-bus overhead (emit/replay/dispatch tax) ==")
     out.append(_exp12_summary(exp12_events.main(smoke=True)))
 
+    print("== Exp 13 (smoke): market scheduler (spot mix + preemption storm) ==")
+    out.append(_exp13_summary(exp13_market.main(smoke=True)))
+
     path = _write_bench_json("smoke", out)
     print(f"\nwrote {path}")
     return out
@@ -176,7 +192,8 @@ def run_all(full: bool) -> list[str]:
     from benchmarks import exp1_per_provider, exp2_cross_provider, exp3a_cross_platform
     from benchmarks import exp3b_heterogeneous, exp4_facts, exp5_groups, exp6_streaming
     from benchmarks import exp7_elastic, exp8_staging, exp9_sched, exp10_scenario
-    from benchmarks import exp11_tenants, exp12_events, kernels_bench, roofline_report
+    from benchmarks import exp11_tenants, exp12_events, exp13_market
+    from benchmarks import kernels_bench, roofline_report
 
     print("== Exp 1: per-provider scaling (OVH/TH/TPT, MCPP vs SCPP) ==")
     r1 = exp1_per_provider.main(full)
@@ -226,6 +243,9 @@ def run_all(full: bool) -> list[str]:
 
     print("== Exp 12: event-bus overhead (emit/replay/dispatch tax) ==")
     out.append(_exp12_summary(exp12_events.main(full)))
+
+    print("== Exp 13: market scheduler (spot mix + preemption storm) ==")
+    out.append(_exp13_summary(exp13_market.main(full)))
 
     print("== Kernel micro-benchmarks ==")
     for name, us, derived in kernels_bench.main(full):

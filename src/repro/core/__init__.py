@@ -20,6 +20,7 @@ from repro.core.dispatcher import StreamingDispatcher
 from repro.core.fault import BreakerState, CircuitBreaker
 from repro.core.group import GroupExhausted, GroupMember, ProviderGroup
 from repro.core.managers.compute import Preempted, ProviderDown
+from repro.core.market import MarketPlanner, PreemptionHazard
 from repro.core.managers.workflow import Workflow, WorkflowManager
 from repro.core.policy import NoEligibleProvider
 from repro.core.provider import ProviderProxy, ProviderSpec
@@ -49,6 +50,8 @@ __all__ = [
     "SiteOutage",
     "LatencyModel",
     "LaunchSpec",
+    "MarketPlanner",
+    "PreemptionHazard",
     "ProviderPool",
     "cloud_startup",
     "hpc_queue_wait",

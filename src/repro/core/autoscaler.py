@@ -115,12 +115,26 @@ class LaunchSpec:
     max_instances: int = 4
     latency: Optional[LatencyModel] = None  # default: per template.platform
     group: Optional[str] = None
+    # market knobs (core/market.py): dollars per slot-hour of occupancy, and
+    # an optional PreemptionHazard (revocation-rate model).  0.0 / None keep
+    # pre-market pools free and non-preemptible.
+    price_per_slot_hour: float = 0.0
+    hazard: Optional["object"] = None  # market.PreemptionHazard (no import cycle)
 
     def __post_init__(self):
-        if self.min_instances < 0 or self.max_instances < self.min_instances:
+        if (
+            self.min_instances < 0
+            or self.max_instances < 0
+            or self.max_instances < self.min_instances
+        ):
             raise ValidationError(
                 f"launch spec {self.template.name!r}: need 0 <= min <= max, "
                 f"got [{self.min_instances}, {self.max_instances}]"
+            )
+        if self.price_per_slot_hour < 0:
+            raise ValidationError(
+                f"launch spec {self.template.name!r}: negative "
+                f"price_per_slot_hour {self.price_per_slot_hour}"
             )
         if self.latency is None:
             make = DEFAULT_LATENCY.get(self.template.platform)
@@ -324,9 +338,16 @@ class Autoscaler:
         cooldown_ticks: int = 5,
         max_concurrent_acquisitions: int = 4,
         interactive_scale_out_pressure: Optional[float] = None,
+        planner=None,
     ):
         self.broker = broker
         self.pool = pool
+        # market planner (core/market.py): when attached, it picks WHICH
+        # template to acquire (cheapest feasible mix instead of fastest
+        # arrival) and settles per-instance spend on release/loss
+        self.planner = planner
+        if planner is not None:
+            planner.bind(self)
         self.tick_s = tick_s
         self.scale_out_pressure = scale_out_pressure
         self.scale_in_pressure = scale_in_pressure
@@ -401,6 +422,14 @@ class Autoscaler:
             launch = self._instance_launch.pop(name, None)
             if launch is not None:
                 self.pool.note_gone(launch, name)
+        if self.planner is not None:
+            # close the books: still-live instances accrued spend up to now
+            with self._lock:
+                live = list(self._instance_launch.items())
+            for name, launch in live:
+                row = self.ledger.get(name)
+                if row is not None and row.get("arrived_at") is not None:
+                    self.planner.settle(launch, name, row)
         self.trace.add("autoscaler_stopped")
 
     def _loop(self) -> None:
@@ -475,6 +504,10 @@ class Autoscaler:
         self.broker.events.emit(
             "scale.tick", pressure=p if math.isfinite(p) else None
         )
+        if self.planner is not None:
+            # the bid loop: re-rank the platform mix every tick so price or
+            # hazard movement re-routes the NEXT acquisition immediately
+            self.planner.replan(self._demand())
         if self.interactive_scale_out_pressure is not None and p < self.scale_out_pressure:
             # the per-class gate: interactive depth alone can force the
             # scale-out path even when aggregate pressure looks tame
@@ -513,7 +546,12 @@ class Autoscaler:
             candidates = self.pool.candidates()
             if not candidates:
                 return
-            launch = candidates[0]
+            if self.planner is not None:
+                launch = self.planner.choose(candidates, deficit)
+                if launch is None:  # nothing feasible under the SLO budget
+                    return
+            else:
+                launch = candidates[0]
             self._acquire(launch)
             deficit -= launch.slots_per_instance
 
@@ -613,6 +651,8 @@ class Autoscaler:
             call.cancel()
         self.broker.abort_acquisition(name)
         self.pool.note_gone(launch, name)
+        if self.planner is not None and row is not None:
+            self.planner.settle(launch, name, row)
         self.trace.add(f"lost:{name}")
 
     # -- release -----------------------------------------------------------
@@ -646,6 +686,8 @@ class Autoscaler:
             row = self.ledger.get(name)
             if row is not None:
                 row["released_at"] = get_clock().now()
+        if self.planner is not None and row is not None:
+            self.planner.settle(launch, name, row)
         self.releases += 1
         self.broker.events.emit("scale.release", instance=name)
 

@@ -212,6 +212,7 @@ class Hydra:
         self._retired_phases: dict[str, float] = {}
         self._retired = {"n_submissions": 0, "n_tasks": 0, "ovh_s": 0.0}
         self.autoscaler = None  # attached via autoscale()
+        self.checkpointer = None  # attached via enable_task_checkpoints()
         self.watchdog: Optional[StragglerWatchdog] = None
         if enable_straggler_mitigation:
             self.watchdog = StragglerWatchdog(
@@ -252,6 +253,24 @@ class Hydra:
             for spec in tenants:
                 self.admission.add_tenant(spec)
         return self.admission
+
+    def enable_task_checkpoints(
+        self, interval_s: float = 5.0, size_mb: float = 64.0
+    ):
+        """Attach a TaskCheckpointer (ckpt/checkpoint.py): preempt-killed
+        tasks resume from their captured ``progress_frac`` on a surviving
+        provider — through the staging gate, since the checkpoint is a
+        replicated dataset — instead of restarting from zero, and resumes
+        never charge ``max_retries``.  Lazy import: the ckpt module pulls
+        numpy/jax, which the broker core must not pay for unconditionally."""
+        from repro.ckpt.checkpoint import TaskCheckpointer
+
+        if self.checkpointer is not None:
+            raise RuntimeError("a task checkpointer is already attached")
+        self.checkpointer = TaskCheckpointer(
+            self.staging.registry, self.events, interval_s=interval_s, size_mb=size_mb
+        )
+        return self.checkpointer
 
     def dispatch(self, tasks: list[Task]) -> None:
         """Feed ready tasks into the streaming dispatcher's queue, through
@@ -428,6 +447,21 @@ class Hydra:
             out["hydra.scale.arrivals"] = a.arrivals
             out["hydra.scale.releases"] = a.releases
             out["hydra.scale.aborts"] = a.aborts
+            mp = a.planner
+            if mp is not None:
+                out["hydra.market.plans"] = mp.plans
+                out["hydra.market.bids"] = mp.bids
+                for tmpl, n in list(mp.bids_by_template.items()):
+                    out[f"hydra.market.bids:{tmpl}"] = n
+                out["hydra.market.reprices"] = mp.reprices
+                out["hydra.cost_node_seconds"] = mp.cost_node_seconds
+                out["hydra.cost_dollars"] = mp.cost_dollars
+        ck = self.checkpointer
+        if ck is not None:
+            out["hydra.ckpt.saves"] = ck.saves
+            out["hydra.ckpt.resumes"] = ck.resumes
+            out["hydra.ckpt.reexecuted_s"] = ck.reexecuted_s
+            out["hydra.ckpt.preempted_work_s"] = ck.preempted_work_s
         adm = self.admission
         if adm is not None:
             out["hydra.admission.admitted"] = adm.admitted
@@ -1106,6 +1140,14 @@ class Hydra:
         with self._fault_lock:
             if task.uid in self._claimed or task.tstate != TaskState.FAILED:
                 return  # already claimed / re-bound / finished elsewhere
+            if self._try_checkpoint_resume(task, exc):
+                # preempt-kill on a checkpointable task: capture progress,
+                # resume from progress_frac WITHOUT charging max_retries —
+                # the re-entry goes through _rebind_and_resubmit, whose
+                # staging gate stages the checkpoint dataset to the chosen
+                # surviving site (checkpoints obey data gravity)
+                self._rebind_and_resubmit([task], exclude=provider)
+                return
             if task.retries < task.max_retries:
                 self._claimed.add(task.uid)
                 task.reset_for_retry()
@@ -1118,6 +1160,23 @@ class Hydra:
                 self._redispatch_in_group(group, [task], exclude=provider)
             else:
                 self._rebind_and_resubmit([task], exclude=provider)
+
+    def _try_checkpoint_resume(self, task: Task, exc) -> bool:
+        """If ``task`` was preempt-killed and a TaskCheckpointer is attached,
+        capture its progress and reset it for resume (no retry charge).
+        Caller holds _fault_lock; the task must be FAILED and unclaimed.
+        Returns True iff the task is now claimed + BOUND for re-entry."""
+        ck = self.checkpointer
+        if ck is None or task.done():
+            return False
+        from repro.core.managers.compute import Preempted
+
+        if not isinstance(exc, Preempted) or not ck.eligible(task):
+            return False
+        self._claimed.add(task.uid)
+        ck.on_preempt(task)
+        task.reset_for_resume()
+        return True
 
     def _on_task_finishing(self, task: Task, provider: str):
         """Stage-out, on the manager thread BEFORE the task's future
@@ -1181,12 +1240,26 @@ class Hydra:
             ]
             self._claimed.update(t.uid for t in orphans)
         out = []
+        ck = self.checkpointer
         for t in orphans:
             # force non-final tasks back to a BOUND-able state
             if t.tstate == TaskState.RUNNING:
-                from repro.core.managers.compute import ProviderDown as PD
+                from repro.core.managers.compute import Preempted, ProviderDown as PD
 
-                t.mark_failed(PD(provider))
+                if ck is not None and ck.eligible(t):
+                    # the instance died under a RUNNING checkpointable task:
+                    # that is a preemption, not the task's failure — capture
+                    # progress and resume on a survivor without charging a
+                    # retry (the shared-store checkpoint replica survives
+                    # this site's death)
+                    t.mark_failed(Preempted(provider))
+                    if t.tstate == TaskState.FAILED and not t.done():
+                        ck.on_preempt(t)
+                        t.reset_for_resume()
+                        out.append(t)
+                        continue
+                else:
+                    t.mark_failed(PD(provider))
             if t.tstate == TaskState.FAILED:
                 if t.retries >= t.max_retries:
                     self._release_claim(t)

@@ -31,6 +31,12 @@ Event types and their injection points:
                     tasks with retry budget left; the executing manager
                     notices the FAILED state when the work function returns
                     and routes the task through the normal retry machinery.
+                    With a TaskCheckpointer attached (core/broker.py
+                    ``enable_task_checkpoints``), checkpointable victims
+                    instead RESUME from their captured ``progress_frac`` on
+                    a surviving provider without charging ``max_retries`` —
+                    the storm becomes a priced, recoverable regime
+                    (core/market.py) rather than a retry-budget drain.
 
 Every event carries ``at_s`` relative to ``arm()`` time.  The engine never
 raises out of a clock callback: injection errors are captured in the log

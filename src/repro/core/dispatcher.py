@@ -87,6 +87,10 @@ class StreamingDispatcher:
         # transfers in flight ~ capacity needed soon; anciently stuck ~ 0).
         self._blocked: dict[str, Task] = {}
         self._blocked_at: dict[str, float] = {}
+        # checkpoint resumes re-entering the gate (ckpt/checkpoint.py): the
+        # resume carries its ckpt:<uid> dataset as an input, so it pays the
+        # normal data-gravity placement + staging cost on the way back in
+        self.resume_gated = 0
         self.max_staging_attempts = 3
         self._seq = 0
         self._lock = threading.Lock()
@@ -397,6 +401,12 @@ class StreamingDispatcher:
             if not t.inputs:
                 ready.append(t)
                 continue
+            if t.ckpt_dataset is not None and t.trace.last("resume_gated") is None:
+                # first gate pass after a checkpoint resume: placement below
+                # stages ckpt:<uid> to whatever surviving site the policy picks
+                t.trace.add("resume_gated")
+                with self._lock:
+                    self.resume_gated += 1
             if targets is None:
                 targets = self.broker.proxy.bind_targets()
             name = t.reserved_provider
@@ -679,6 +689,7 @@ class StreamingDispatcher:
             "pending_by_class": self.pending_by_class(),
             "lanes": len(self._lanes),
             "staging_blocked": self.stalled_on_staging(),
+            "resume_gated": self.resume_gated,
             "queue_pressure": self._finite_pressure(),
             "incoming_slots": self.broker.incoming_slots(),
             "retry_backoffs": int(view.get("hydra.dispatch.retry_backoffs")),

@@ -384,6 +384,50 @@ EVENTS: Dict[str, EventSpec] = {
             "hydra.staging.evictions",
             "An LRU replica was evicted to make room at a site.",
         ),
+        # -- market (market.py) --------------------------------------------
+        _spec(
+            "market.plan",
+            "demand chosen",
+            "market.MarketPlanner.plan",
+            "hydra.market.plans",
+            "The bid loop produced a platform mix for the current demand.",
+        ),
+        _spec(
+            "market.bid",
+            "template price eff_slots",
+            "market.MarketPlanner.plan",
+            "hydra.market.bids",
+            "One template was selected in a plan (keyed by template).",
+        ),
+        _spec(
+            "market.price",
+            "template price",
+            "market.MarketPlanner.set_price",
+            "hydra.market.reprices",
+            "A template was repriced mid-run (spot market movement).",
+        ),
+        _spec(
+            "market.spend",
+            "instance node_s dollars",
+            "market.MarketPlanner.settle",
+            "hydra.cost_node_seconds hydra.cost_dollars",
+            "An instance's occupancy was settled into the cost ledger.",
+        ),
+        # -- checkpoint/restore (ckpt/checkpoint.py) -----------------------
+        _spec(
+            "ckpt.save",
+            "task dataset progress",
+            "checkpoint.TaskCheckpointer.on_preempt",
+            "hydra.ckpt.saves",
+            "A preempted task's progress was captured as a replicated dataset.",
+        ),
+        _spec(
+            "ckpt.resume",
+            "task progress lost_s done_s",
+            "checkpoint.TaskCheckpointer.on_preempt",
+            "hydra.ckpt.resumes hydra.ckpt.reexecuted_s hydra.ckpt.preempted_work_s",
+            "A preempted task will resume from its checkpoint, not from zero.",
+        ),
         # -- chaos (chaos.py) ----------------------------------------------
         _spec(
             "chaos.inject",
@@ -638,6 +682,34 @@ def _r_replica_evict(v: MetricsView, a: Dict[str, Any]) -> None:
     v._bump("hydra.staging.evictions")
 
 
+def _r_market_plan(v: MetricsView, a: Dict[str, Any]) -> None:
+    v._bump("hydra.market.plans")
+
+
+def _r_market_bid(v: MetricsView, a: Dict[str, Any]) -> None:
+    v._bump("hydra.market.bids")
+    v._bump_keyed("hydra.market.bids", a["template"])
+
+
+def _r_market_price(v: MetricsView, a: Dict[str, Any]) -> None:
+    v._bump("hydra.market.reprices")
+
+
+def _r_market_spend(v: MetricsView, a: Dict[str, Any]) -> None:
+    v._bump("hydra.cost_node_seconds", a["node_s"])
+    v._bump("hydra.cost_dollars", a["dollars"])
+
+
+def _r_ckpt_save(v: MetricsView, a: Dict[str, Any]) -> None:
+    v._bump("hydra.ckpt.saves")
+
+
+def _r_ckpt_resume(v: MetricsView, a: Dict[str, Any]) -> None:
+    v._bump("hydra.ckpt.resumes")
+    v._bump("hydra.ckpt.reexecuted_s", a["lost_s"])
+    v._bump("hydra.ckpt.preempted_work_s", a["done_s"])
+
+
 def _r_chaos_inject(v: MetricsView, a: Dict[str, Any]) -> None:
     v._bump_keyed("hydra.chaos.injected", a["kind"])
 
@@ -679,6 +751,12 @@ _REDUCERS: Dict[str, Callable[[MetricsView, Dict[str, Any]], None]] = {
     "transfer.fail": _r_transfer_fail,
     "transfer.reroute": _r_transfer_reroute,
     "replica.evict": _r_replica_evict,
+    "market.plan": _r_market_plan,
+    "market.bid": _r_market_bid,
+    "market.price": _r_market_price,
+    "market.spend": _r_market_spend,
+    "ckpt.save": _r_ckpt_save,
+    "ckpt.resume": _r_ckpt_resume,
     "chaos.inject": _r_chaos_inject,
 }
 

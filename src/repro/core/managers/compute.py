@@ -259,7 +259,9 @@ class CaaSManager:
         if task.kind == "noop":
             return None
         if task.kind == "sleep":
-            get_clock().sleep(task.duration)
+            # checkpoint resume (ckpt/checkpoint.py): only the work beyond
+            # the captured progress_frac is re-executed
+            get_clock().sleep(task.duration * (1.0 - task.progress_frac))
             return None
         if task.kind == "callable":
             return task.fn() if task.fn else None

@@ -25,8 +25,11 @@ class CredentialError(RuntimeError):
     pass
 
 
-class ValidationError(RuntimeError):
-    pass
+class ValidationError(RuntimeError, ValueError):
+    """Bad configuration value.  Subclasses ValueError too: callers that
+    guard spec construction with ``except ValueError`` (the stdlib contract
+    for rejected arguments, e.g. LaunchSpec bounds) catch these, while the
+    historical ``except RuntimeError`` handlers keep working."""
 
 
 @dataclass

@@ -138,6 +138,17 @@ class Task(Future):
         self.slo_class = slo_class
         self.admitted: bool = False
         self.admission_held: bool = False
+        # task-level checkpoint/restore (ckpt/checkpoint.py): fraction of the
+        # work already captured in a checkpoint dataset.  A resumed sleep
+        # task executes only the remaining (1 - progress_frac) of its
+        # duration; ``ckpt_dataset`` names the replicated checkpoint in the
+        # DatasetRegistry (also appended to ``inputs`` so the staging gate
+        # places the resume next to its bytes); ``resumes`` counts
+        # checkpoint resumes, which — unlike ``retries`` — never charge
+        # ``max_retries``.
+        self.progress_frac: float = 0.0
+        self.ckpt_dataset: Optional[str] = None
+        self.resumes: int = 0
         self.trace = Trace()
         self._state_lock = threading.RLock()
         self._tstate = TaskState.NEW
@@ -214,6 +225,16 @@ class Task(Future):
             self.retries += 1
             self.advance(TaskState.BOUND)
             self.pod_uid = None
+
+    def reset_for_resume(self) -> None:
+        """FAILED -> BOUND after a checkpoint capture (ckpt/checkpoint.py):
+        the resumed task re-executes only the work beyond ``progress_frac``,
+        and — unlike ``reset_for_retry`` — never charges ``max_retries``:
+        preemption is the platform's fault, not the task's."""
+        with self._state_lock:
+            self.advance(TaskState.BOUND)
+            self.pod_uid = None
+            self.trace.add("resumed")
 
 
 class CancelledError(RuntimeError):

@@ -144,9 +144,16 @@ def build_broker(spec: ScenarioSpec) -> Hydra:
     )
     for p in spec.providers:
         h.register_provider(p.to_core())
+    if spec.checkpoint_interval_s is not None:
+        h.enable_task_checkpoints(interval_s=spec.checkpoint_interval_s)
     if spec.elastic:
         pool = ProviderPool([e.to_core() for e in spec.elastic], seed=spec.seed)
-        h.autoscale(pool, tick_s=1.0)
+        planner = None
+        if spec.market_slo_s is not None:
+            from repro.core.market import MarketPlanner
+
+            planner = MarketPlanner(slo_target_s=spec.market_slo_s, seed=spec.seed)
+        h.autoscale(pool, tick_s=1.0, planner=planner)
     return h
 
 

@@ -80,8 +80,18 @@ class ElasticDecl:
     min_instances: int = 0
     max_instances: int = 4
     latency_s: float = 15.0
+    # market knobs (core/market.py): a price makes the template biddable by
+    # the MarketPlanner; an explicit hazard rate models spot-style reclaim
+    # pressure (None = the platform default in market._DEFAULT_HAZARD)
+    price_per_slot_hour: float = 0.0
+    hazard_rate_per_hour: Optional[float] = None
 
     def to_core(self) -> LaunchSpec:
+        hazard = None
+        if self.hazard_rate_per_hour is not None:
+            from repro.core.market import PreemptionHazard
+
+            hazard = PreemptionHazard(rate_per_hour=self.hazard_rate_per_hour)
         return LaunchSpec(
             template=ProviderSpec(
                 name=self.template,
@@ -92,6 +102,8 @@ class ElasticDecl:
             min_instances=self.min_instances,
             max_instances=self.max_instances,
             latency=LatencyModel(distribution="fixed", mean_s=self.latency_s),
+            price_per_slot_hour=self.price_per_slot_hour,
+            hazard=hazard,
         )
 
 
@@ -165,6 +177,12 @@ class ScenarioSpec:
     tasks_per_pod: int = 16
     batch_window: float = 0.001
     site_capacity_mb: Optional[float] = None
+    # market scheduler + task checkpoints (core/market.py, ckpt/checkpoint.py):
+    # a makespan/SLO target arms a MarketPlanner over the elastic templates;
+    # a checkpoint interval attaches a TaskCheckpointer so preempt-killed
+    # tasks resume from progress_frac instead of restarting
+    market_slo_s: Optional[float] = None
+    checkpoint_interval_s: Optional[float] = None
     # invariant bounds
     max_makespan_inflation: float = 1.5
     timeout_s: float = 3600.0

@@ -12,6 +12,11 @@ Two checks, both wired into `make docs-check` and the CI lint job:
    set of event names, in both directions: an event added to the code
    without a docs row fails, and a documented event the code no longer
    emits fails.
+3. **Metric sync** — every derived metric a reducer maintains (the
+   ``metrics`` list in each event spec, e.g. ``hydra.cost_dollars`` from
+   ``market.spend``) must be mentioned somewhere in
+   `docs/OBSERVABILITY.md`, so a new ``market.*``-style event cannot land
+   with its metrics undocumented.
 
 Stdlib only; run as ``PYTHONPATH=src python tools/docs_check.py``.
 """
@@ -84,9 +89,26 @@ def check_taxonomy() -> list[str]:
     return errors
 
 
+def check_metrics() -> list[str]:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.events import EVENTS
+
+    with open(OBSERVABILITY, encoding="utf-8") as fh:
+        text = fh.read()
+    errors = []
+    for name, spec in sorted(EVENTS.items()):
+        for metric in spec.metrics:
+            if metric not in text:
+                errors.append(
+                    f"docs/OBSERVABILITY.md: metric `{metric}` (derived "
+                    f"from `{name}`) is not documented"
+                )
+    return errors
+
+
 def main() -> int:
     md_files = tracked_markdown()
-    errors = check_links(md_files) + check_taxonomy()
+    errors = check_links(md_files) + check_taxonomy() + check_metrics()
     for e in errors:
         print(f"docs-check: {e}", file=sys.stderr)
     if errors:
