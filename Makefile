@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint docs-check cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging bench-sched bench-scenario bench-tenants bench-events bench-market bench-check
+.PHONY: test test-fast lint docs-check cov bench bench-full bench-smoke bench-groups bench-streaming bench-elastic bench-staging bench-sched bench-scenario bench-tenants bench-events bench-market bench-kernels bench-check
 
 test:  ## tier-1 verify (ROADMAP.md)
 	$(PY) -m pytest -x -q
@@ -57,6 +57,9 @@ bench-events:  ## exp12 only: event-bus emit/replay throughput + dispatch tax
 
 bench-market:  ## exp13 only: spot-vs-on-demand cost + checkpoint storm recovery
 	$(PY) -m benchmarks.exp13_market --full
+
+bench-kernels:  ## exp14 only: per-kernel XLA parity rows + autotuner tuned-vs-default
+	$(PY) -m benchmarks.kernels_bench
 
 bench-check:  ## smoke run + dispatch-throughput regression gate vs committed baseline
 	git show HEAD:artifacts/bench/BENCH_smoke.json > /tmp/bench_baseline.json

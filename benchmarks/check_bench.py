@@ -11,8 +11,10 @@ Gates:
 
   exp9_sched.dispatch_tasks_per_s    higher is better (throughput floor)
   exp10_scenario.makespan_inflation  lower is better (resilience ceiling)
-  exp11_tenants.interactive_p99_ratio lower is better, plus a HARD absolute
-                                     ceiling of 3.0 on the fresh run
+  exp11_tenants.interactive_p99_ratio lower is better (widened 50% band —
+                                     the p99 is quantized, see GATES), plus
+                                     a HARD absolute ceiling of 3.0 on the
+                                     fresh run
   exp10_scenario.failed              HARD: must be exactly 0 in the fresh run
   exp13_market.cost_ratio            HARD absolute ceiling 0.8: the spot mix
                                      must beat all-on-demand dollars by >= 20%
@@ -21,6 +23,17 @@ Gates:
                                      preemption storm (checkpoint resumes)
   exp13_market.reexec_frac           HARD ceiling 0.25: <= 25% of preempted
                                      work re-executed after the storm
+  kernel_<name>.xla_us               lower is better (per-kernel XLA-path
+                                     latency, relative 30% gate)
+  kernel_<name>.allclose_err         HARD ceiling 1e-3: a Pallas kernel that
+                                     diverges from its reference fails CI
+                                     like a ledger divergence
+  exp14_kernels.tuned_speedup        HARD floor 1.15: the autotuned config
+                                     must beat the committed default on at
+                                     least one demo kernel/shape
+  exp14_kernels.sweep_cut            HARD floor 2.0: the roofline pruner
+                                     must cut the swept configs >= 2x vs
+                                     the exhaustive space
 
 A gated row missing from the *baseline* is skipped (first PR that adds the
 experiment); missing from the *fresh* run it is an error (the experiment
@@ -53,12 +66,27 @@ class Gate:
     row: str
     metric: str
     higher_is_better: bool
+    # overrides DEFAULT_TOLERANCE / the CLI tolerance for this gate only:
+    # needed when the metric's own quantization is coarser than the global
+    # 30% band, so one quantum of drift is not a regression
+    tolerance: Optional[float] = None
 
+
+KERNEL_NAMES = ("flash_attention", "selective_scan", "rglru_scan", "moe_gmm")
 
 GATES = [
     Gate(row="exp9_sched", metric="dispatch_tasks_per_s", higher_is_better=True),
     Gate(row="exp10_scenario", metric="makespan_inflation", higher_is_better=False),
-    Gate(row="exp11_tenants", metric="interactive_p99_ratio", higher_is_better=False),
+    # p99 over 100 interactive requests on the virtual clock is quantized to
+    # ~0.05 s steps (observed modes: 0.35 and 0.5 flooded -> ratios 1.4 and
+    # 2.0), so one scheduling quantum is a +-40% step and the default 30%
+    # band flips on noise; 50% accepts the adjacent quantum while the HARD
+    # absolute ceiling of 3.0 below still enforces the tenant-isolation SLO
+    Gate(row="exp11_tenants", metric="interactive_p99_ratio", higher_is_better=False,
+         tolerance=0.50),
+] + [
+    Gate(row=f"kernel_{k}", metric="xla_us", higher_is_better=False)
+    for k in KERNEL_NAMES
 ]
 # hard invariants on the fresh run, independent of any baseline
 HARD_ZERO = [
@@ -80,6 +108,15 @@ HARD_MAX = [
     # >= 20%, and write-behind checkpoints bound storm re-execution
     ("exp13_market", "cost_ratio", 0.8),
     ("exp13_market", "reexec_frac", 0.25),
+    # kernel correctness is a HARD gate: interpret-mode Pallas output must
+    # match the XLA reference to 1e-3 on every registered kernel
+] + [(f"kernel_{k}", "allclose_err", 1e-3) for k in KERNEL_NAMES]
+# absolute floors on the fresh run (ISSUE exp14): the autotuner must beat
+# the committed defaults somewhere real, and the roofline pruner must
+# actually prune — a sweep that times the whole space "wins" trivially
+HARD_MIN = [
+    ("exp14_kernels", "tuned_speedup", 1.15),
+    ("exp14_kernels", "sweep_cut", 2.0),
 ]
 
 
@@ -93,7 +130,8 @@ def metric_value(rows: dict[str, str], row: str, metric: str) -> Optional[float]
     derived = rows.get(row)
     if derived is None:
         return None
-    m = re.search(rf"{metric}=([0-9.]+)", derived)
+    # scientific notation included: kernel rows carry allclose_err=1.19e-07
+    m = re.search(rf"{metric}=([0-9]+(?:\.[0-9]+)?(?:[eE][+-]?[0-9]+)?)", derived)
     return float(m.group(1)) if m else None
 
 
@@ -106,6 +144,8 @@ def check_gate(gate: Gate, baseline: dict, fresh: dict, tolerance: float) -> Opt
     if old is None:
         print(f"{gate.row}.{gate.metric}: no baseline yet -> SKIPPED (fresh={new:g})")
         return None
+    if gate.tolerance is not None:
+        tolerance = gate.tolerance
     if gate.higher_is_better:
         bound = old * (1.0 - tolerance)
         ok = new >= bound
@@ -148,6 +188,19 @@ def check_hard_max(fresh: dict) -> list[str]:
     return failures
 
 
+def check_hard_min(fresh: dict) -> list[str]:
+    failures = []
+    for row, metric, floor in HARD_MIN:
+        val = metric_value(fresh, row, metric)
+        if val is None:
+            failures.append(f"{row}.{metric}: missing from the fresh run")
+        elif val < floor:
+            failures.append(f"{row}.{metric} must be >= {floor:g}, got {val:g}")
+        else:
+            print(f"{row}.{metric}: {val:g} >= {floor:g} -> OK")
+    return failures
+
+
 def main(argv: list[str]) -> int:
     if len(argv) < 2:
         print(__doc__)
@@ -162,6 +215,7 @@ def main(argv: list[str]) -> int:
     ]
     failures += check_hard_zero(fresh)
     failures += check_hard_max(fresh)
+    failures += check_hard_min(fresh)
     for msg in failures:
         print(f"FAIL: {msg}")
     return 1 if failures else 0

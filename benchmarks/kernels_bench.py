@@ -1,80 +1,125 @@
-"""Kernel micro-bench: interpret-mode correctness timing + XLA-path timing.
+"""Kernel micro-bench + exp14 autotuner arm (registry-driven, CI-gated).
 
-On this CPU container the Pallas kernels run in interpret mode (orders of
-magnitude slower than compiled Mosaic); the number that matters for the
-repo's CI is the XLA-path (ref) timing and the allclose check.  Prints the
-``name,us_per_call,derived`` rows required by benchmarks/run.py.
+Two row families feed ``BENCH_smoke.json`` (benchmarks/run.py --smoke) and
+the check_bench.py gates:
+
+  kernel_<name>   one row per registered kernel at its smoke (or --full)
+                  shape: the us_per_call column is the XLA reference path
+                  (the number that moves with real perf on this CPU host),
+                  ``derived`` carries ``allclose_err`` (interpret-mode
+                  Pallas vs reference, HARD-gated at 1e-3) and ``xla_us``
+                  (relative 30% regression gate).
+  exp14_kernels   the tuned-vs-default demonstration: the roofline
+                  autotuner sweeps each demo shape (wall timer, warm-up +
+                  min-of-3), the committed default config is timed the same
+                  way, and the row reports the best tuned/default speedup
+                  plus the pruner's sweep cut — both HARD-gated
+                  (speedup >= 1.15x, cut >= 2x).
+
+Demo shapes are deliberately small-batch/large-feature: on the interpret
+path (and on the roofline model) those shapes make the grid-cell count the
+dominant config-sensitive term, so the committed default block (512) is
+measurably beaten by the full-width block the tuner picks.  See
+docs/EXPERIMENTS.md §exp14 for measured numbers + noise discussion.
 """
 from __future__ import annotations
 
+import sys
 import time
 
-import numpy as np
-
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.kernels import registry as kreg
+from repro.kernels.autotune import Autotuner
 
 
-def _time(fn, *args, reps=3) -> float:
-    fn(*args)  # compile
+def _time_us(fn, reps: int = 3) -> float:
+    """Warm-up call (compile) + mean-of-reps, microseconds."""
+    jax.block_until_ready(fn())
     t0 = time.perf_counter()
     for _ in range(reps):
-        jax.block_until_ready(fn(*args))
+        jax.block_until_ready(fn())
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def main(full: bool = False):
-    rng = np.random.default_rng(0)
+def _min_s(fn, reps: int = 3) -> float:
+    """Warm-up + min-of-reps, seconds (the autotuner's timing discipline)."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# exp14 demo problems: small batch x full-width feature dim, where the
+# default block (512) launches 2x the grid cells of the admissible maximum
+# and the interpret path measures that directly (1.5-1.9x on this host)
+DEMO_SHAPES = [
+    ("rglru_scan", {"B": 1, "L": 64, "dr": 1024}),
+    ("selective_scan", {"B": 1, "chunk": 32, "di": 1024, "N": 8}),
+]
+
+
+def kernel_rows(full: bool = False) -> list[tuple]:
+    """One ``kernel_<name>`` row per registered kernel."""
     rows = []
+    interpret = kreg.interpret_default()
+    for name, kdef in kreg.KERNELS.items():
+        shape = dict(kdef.full_shape if full else kdef.smoke_shape)
+        args = kdef.make_args(shape, "float32", 0)
+        t_ref = _time_us(lambda: kdef.ref(shape, args))
+        err = kreg.max_abs_err(
+            kdef.call(shape, args, kdef.defaults(shape), interpret),
+            kdef.ref(shape, args),
+        )
+        rows.append(
+            (f"kernel_{name}", t_ref, f"allclose_err={err:.2e}_xla_us={t_ref:.1f}")
+        )
+    return rows
 
-    B, H, KV, L, hd = 1, 4, 2, 512, 64
-    q = jnp.asarray(rng.normal(size=(B, H, L, hd)), jnp.float32)
-    k = jnp.asarray(rng.normal(size=(B, KV, L, hd)), jnp.float32)
-    v = jnp.asarray(rng.normal(size=(B, KV, L, hd)), jnp.float32)
-    t_ref = _time(lambda q, k, v: ref.attention_ref(q, k, v, causal=True), q, k, v)
-    err = float(jnp.max(jnp.abs(
-        ops.flash_attention(q, k, v, causal=True) - ref.attention_ref(q, k, v, causal=True)
-    )))
-    rows.append(("flash_attention_ref_xla", t_ref, f"allclose_err={err:.2e}"))
 
-    B, ck, di, N = 2, 64, 256, 16
-    x = jnp.asarray(rng.normal(size=(B, ck, di)), jnp.float32)
-    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, ck, di)), jnp.float32)
-    bm = jnp.asarray(rng.normal(size=(B, ck, N)), jnp.float32)
-    cm = jnp.asarray(rng.normal(size=(B, ck, N)), jnp.float32)
-    a = -jnp.asarray(rng.uniform(0.5, 2.0, (di, N)), jnp.float32)
-    h0 = jnp.zeros((B, di, N), jnp.float32)
-    t_ref = _time(lambda *a_: ref.selective_scan_chunk_ref(*a_), x, dt, bm, cm, a, h0)
-    y1, h1 = ops.selective_scan_chunk(x, dt, bm, cm, a, h0, block_d=128)
-    y2, h2 = ref.selective_scan_chunk_ref(x, dt, bm, cm, a, h0)
-    err = float(jnp.max(jnp.abs(y1 - y2)))
-    rows.append(("selective_scan_ref_xla", t_ref, f"allclose_err={err:.2e}"))
+def exp14_row(reps: int = 3) -> tuple:
+    """Tuned-vs-default on the demo shapes; best speedup + worst sweep cut."""
+    tuner = Autotuner(timer="wall", reps=reps)
+    interpret = kreg.interpret_default()
+    best = None  # (speedup, kernel, tuned_s, default_s, result)
+    min_cut = float("inf")
+    for name, shape in DEMO_SHAPES:
+        kdef = kreg.get_kernel(name)
+        result = tuner.tune(name, shape, "float32")
+        min_cut = min(min_cut, result.sweep_cut)
+        args = kdef.make_args(shape, "float32", 0)
+        default_s = _min_s(
+            lambda: kdef.call(shape, args, kdef.defaults(shape), interpret), reps
+        )
+        tuned_s = _min_s(
+            lambda: kdef.call(shape, args, result.config, interpret), reps
+        )
+        speedup = default_s / tuned_s if tuned_s > 0 else float("inf")
+        print(
+            f"  exp14 {name}: tuned {kreg.config_sig(result.config)} "
+            f"{tuned_s:.4f}s vs default {kreg.config_sig(kdef.defaults(shape))} "
+            f"{default_s:.4f}s -> {speedup:.2f}x (cut {result.sweep_cut:.1f})"
+        )
+        if best is None or speedup > best[0]:
+            best = (speedup, name, tuned_s, default_s)
+    speedup, name, tuned_s, default_s = best
+    derived = (
+        f"tuned_speedup={speedup:.3f}_sweep_cut={min_cut:.1f}"
+        f"_best_kernel={name}_tuned_s={tuned_s:.4f}_default_s={default_s:.4f}"
+    )
+    return ("exp14_kernels", tuned_s * 1e6, derived)
 
-    B, L2, dr = 2, 128, 512
-    la = -jnp.asarray(rng.uniform(0.01, 1.0, (B, L2, dr)), jnp.float32)
-    gx = jnp.asarray(rng.normal(size=(B, L2, dr)), jnp.float32)
-    h0r = jnp.zeros((B, dr), jnp.float32)
-    t_ref = _time(lambda *a_: ref.rglru_ref(*a_), la, gx, h0r)
-    y1, _ = ops.rglru_scan(la, gx, h0r, block_d=256)
-    y2, _ = ref.rglru_ref(la, gx, h0r)
-    err = float(jnp.max(jnp.abs(y1 - y2)))
-    rows.append(("rglru_scan_ref_xla", t_ref, f"allclose_err={err:.2e}"))
 
-    E, C, D, F = 4, 128, 256, 512
-    x = jnp.asarray(rng.normal(size=(E, C, D)), jnp.float32)
-    w = jnp.asarray(rng.normal(size=(E, D, F)), jnp.float32)
-    t_ref = _time(lambda *a_: ref.moe_gmm_ref(*a_), x, w)
-    err = float(jnp.max(jnp.abs(
-        ops.moe_gmm(x, w, block_c=64, block_f=128, block_d=128) - ref.moe_gmm_ref(x, w)
-    )))
-    rows.append(("moe_gmm_ref_xla", t_ref, f"allclose_err={err:.2e}"))
-
+def main(full: bool = False) -> list[tuple]:
+    rows = kernel_rows(full)
+    rows.append(exp14_row())
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    main("--full" in sys.argv)

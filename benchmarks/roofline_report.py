@@ -1,5 +1,8 @@
 """Roofline report: aggregates artifacts/dryrun/*.json into the §Roofline
-table (every baselined (arch x shape) cell on the single-pod mesh).
+table (every baselined (arch x shape) cell on the single-pod mesh), plus
+the autotuner's roofline-predicted Pallas kernel configs when the dry run
+saved them (launch/dryrun.py kernel_report) — chosen block config next to
+predicted arithmetic intensity, so model-vs-measured drift is one table.
 """
 from __future__ import annotations
 
@@ -58,6 +61,16 @@ def markdown(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def kernel_predictions() -> list[dict]:
+    """Rows saved by ``launch/dryrun.py kernel_report`` (empty when the dry
+    run has not been re-run since the autotuner landed)."""
+    path = os.path.join(ARTIFACT_DIR, "kernels__predicted.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f).get("rows", [])
+
+
 def main(full: bool = False):
     rows = table(load_records())
     write_csv("roofline_16x16", rows)
@@ -65,6 +78,13 @@ def main(full: bool = False):
     for r in rows:
         print(f"  {r['arch']:22s} {r['shape']:12s} bottleneck={r['bottleneck_est']:10s} "
               f"mfu_est={r['mfu_est']}")
+    krows = kernel_predictions()
+    if krows:
+        write_csv("roofline_kernels_predicted", krows)
+        print(f"kernel configs predicted (roofline autotuner): {len(krows)}")
+        for r in krows:
+            print(f"  {r['kernel']:18s} {r['tier']:5s} config={r['config']:28s} "
+                  f"intensity={r['intensity_flops_per_byte']}")
     return rows
 
 

@@ -129,8 +129,9 @@ def _write_bench_json(tag: str, out: list[str]) -> str:
 
 
 def run_smoke() -> list[str]:
-    """CI-sized: broker-core experiments only (no kernel/roofline sweeps),
-    tiny counts, and the elastic run entirely on a virtual clock."""
+    """CI-sized: broker-core experiments at tiny counts (elastic run on a
+    virtual clock) plus the kernel lane — per-kernel XLA parity rows and
+    the exp14 autotuner arm at smoke shapes."""
     out = []
 
     from benchmarks import (
@@ -144,6 +145,7 @@ def run_smoke() -> list[str]:
         exp11_tenants,
         exp12_events,
         exp13_market,
+        kernels_bench,
     )
 
     print("== Exp 1 (smoke): per-provider scaling ==")
@@ -180,6 +182,10 @@ def run_smoke() -> list[str]:
 
     print("== Exp 13 (smoke): market scheduler (spot mix + preemption storm) ==")
     out.append(_exp13_summary(exp13_market.main(smoke=True)))
+
+    print("== Exp 14 (smoke): Pallas kernels (XLA parity + autotuner demo) ==")
+    for name, us, derived in kernels_bench.main(False):
+        out.append(f"{name},{us:.1f},{derived}")
 
     path = _write_bench_json("smoke", out)
     print(f"\nwrote {path}")

@@ -255,8 +255,12 @@ class TaskCheckpointer:
         self.preempted_work_s = 0.0
 
     def eligible(self, task) -> bool:
-        """Only duration-modeled work has resumable progress; noop/callable
-        /compute tasks restart from zero like before."""
+        """Only work with resumable progress checkpoints: duration-modeled
+        sleeps and rep-granular kernel payloads (managers/compute.py
+        KernelRuntime advances ``progress_frac`` per completed rep).
+        noop/callable/compute tasks restart from zero like before."""
+        if task.kind == "kernel":
+            return True
         return task.kind == "sleep" and task.duration > 0
 
     def on_preempt(self, task) -> None:
@@ -266,16 +270,24 @@ class TaskCheckpointer:
         from repro.core.staging import SHARED_SITE
         from repro.runtime.clock import get_clock
 
-        prior_s = task.progress_frac * task.duration
-        t0 = task.trace.last("exec_start")
-        run_s = 0.0
-        if t0 is not None:
-            run_s = min(max(0.0, get_clock().now() - t0), task.duration - prior_s)
-        done_s = prior_s + run_s
-        # last durable interval boundary; never regress below prior progress
-        ckpt_s = max(math.floor(done_s / self.interval_s) * self.interval_s, prior_s)
-        lost_s = done_s - ckpt_s
-        task.progress_frac = min(1.0, ckpt_s / task.duration)
+        if task.kind == "kernel":
+            # rep-granular payloads checkpoint themselves: the KernelRuntime
+            # advances progress_frac at every completed-rep boundary, so the
+            # current value already IS the last durable checkpoint and only
+            # the partial rep in flight is lost (it was never counted done)
+            done_s = task.kernel_done_s
+            lost_s = 0.0
+        else:
+            prior_s = task.progress_frac * task.duration
+            t0 = task.trace.last("exec_start")
+            run_s = 0.0
+            if t0 is not None:
+                run_s = min(max(0.0, get_clock().now() - t0), task.duration - prior_s)
+            done_s = prior_s + run_s
+            # last durable interval boundary; never regress below prior progress
+            ckpt_s = max(math.floor(done_s / self.interval_s) * self.interval_s, prior_s)
+            lost_s = done_s - ckpt_s
+            task.progress_frac = min(1.0, ckpt_s / task.duration)
         name = f"ckpt:{task.uid}"
         # durable shared-store replica: survives the executing site's death;
         # the staging gate moves it (via TransferEngine) to the resume site

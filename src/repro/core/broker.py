@@ -213,6 +213,15 @@ class Hydra:
         self._retired = {"n_submissions": 0, "n_tasks": 0, "ovh_s": 0.0}
         self.autoscaler = None  # attached via autoscale()
         self.checkpointer = None  # attached via enable_task_checkpoints()
+        self.autotuner = None  # attached via enable_kernel_autotune()
+        # kernel-payload legacy accumulators (HYDRA_EVENTS_CHECK ground
+        # truth for kernel.exec): bumped under _kernel_lock adjacent to the
+        # emit so the log fold replays float additions in the same order
+        self._kernel_lock = threading.Lock()
+        self.kernel_execs = 0
+        self.kernel_execs_by: dict[str, int] = {}
+        self.kernel_reps = 0
+        self.kernel_seconds = 0.0
         self.watchdog: Optional[StragglerWatchdog] = None
         if enable_straggler_mitigation:
             self.watchdog = StragglerWatchdog(
@@ -271,6 +280,27 @@ class Hydra:
             self.staging.registry, self.events, interval_s=interval_s, size_mb=size_mb
         )
         return self.checkpointer
+
+    def enable_kernel_autotune(
+        self, *, timer: str = "wall", reps: int = 3, seed: int = 0
+    ):
+        """Attach a Pallas Autotuner (kernels/autotune.py): sweeps land as
+        pinned replicated datasets in this broker's staging registry and
+        cache misses emit ``kernel.tune`` on this broker's bus.  The tuner
+        is also installed process-global so kernels/ops.py entry points
+        (and kernel-payload tasks) consult it under ``HYDRA_AUTOTUNE=1``.
+        Lazy import: the kernels package pulls jax, which the broker core
+        must not pay for unconditionally."""
+        from repro.kernels.autotune import Autotuner, set_autotuner
+
+        if self.autotuner is not None:
+            raise RuntimeError("a kernel autotuner is already attached")
+        self.autotuner = Autotuner(
+            registry=self.staging.registry, events=self.events,
+            timer=timer, reps=reps, seed=seed,
+        )
+        set_autotuner(self.autotuner)
+        return self.autotuner
 
     def dispatch(self, tasks: list[Task]) -> None:
         """Feed ready tasks into the streaming dispatcher's queue, through
@@ -462,6 +492,17 @@ class Hydra:
             out["hydra.ckpt.resumes"] = ck.resumes
             out["hydra.ckpt.reexecuted_s"] = ck.reexecuted_s
             out["hydra.ckpt.preempted_work_s"] = ck.preempted_work_s
+        at = self.autotuner
+        if at is not None:
+            out["hydra.kernel.tunes"] = at.tunes
+            out["hydra.kernel.swept_configs"] = at.swept_configs
+        # unconditional: zero-valued keys match an absent view metric, and
+        # any broker can receive kernel-payload tasks without opting in
+        out["hydra.kernel.execs"] = self.kernel_execs
+        for kname, n in list(self.kernel_execs_by.items()):
+            out[f"hydra.kernel.execs:{kname}"] = n
+        out["hydra.kernel.reps"] = self.kernel_reps
+        out["hydra.kernel.seconds"] = self.kernel_seconds
         adm = self.admission
         if adm is not None:
             out["hydra.admission.admitted"] = adm.admitted
@@ -1130,6 +1171,21 @@ class Hydra:
         else:
             self.events.emit("task.complete", provider=provider, failed=failed)
         if not failed:
+            if task.kind == "kernel" and task.kernel_stats is not None:
+                ks = task.kernel_stats
+                with self._kernel_lock:
+                    self.kernel_execs += 1
+                    self.kernel_execs_by[ks["kernel"]] = (
+                        self.kernel_execs_by.get(ks["kernel"], 0) + 1
+                    )
+                    self.kernel_reps += ks["reps"]
+                    self.kernel_seconds += ks["kernel_s"]
+                    self.events.emit(
+                        "kernel.exec",
+                        kernel=ks["kernel"],
+                        reps=ks["reps"],
+                        kernel_s=ks["kernel_s"],
+                    )
             return
         if isinstance(exc, ProviderDown):  # _handle_*_down owns the outage transition
             if group is not None:
@@ -1391,6 +1447,12 @@ class Hydra:
         self._dispatch.shutdown(wait=wait)
         self.staging.shutdown()
         self.store.cleanup()
+        if self.autotuner is not None:
+            # release the process-global slot iff it is still ours (a later
+            # broker may have installed its own tuner in the meantime)
+            from repro.kernels.autotune import unset_autotuner
+
+            unset_autotuner(self.autotuner)
         log_base = os.environ.get("HYDRA_EVENTS_LOG", "")
         if log_base:
             self.events.dump_jsonl(next_log_path(log_base))

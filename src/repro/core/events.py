@@ -428,6 +428,21 @@ EVENTS: Dict[str, EventSpec] = {
             "hydra.ckpt.resumes hydra.ckpt.reexecuted_s hydra.ckpt.preempted_work_s",
             "A preempted task will resume from its checkpoint, not from zero.",
         ),
+        # -- kernels (kernels/autotune.py + broker) ------------------------
+        _spec(
+            "kernel.tune",
+            "kernel sig config swept exhaustive",
+            "autotune.Autotuner.tune",
+            "hydra.kernel.tunes hydra.kernel.swept_configs",
+            "A cache-miss sweep chose a tuned config (cache hits never re-emit).",
+        ),
+        _spec(
+            "kernel.exec",
+            "kernel reps kernel_s",
+            "broker.Hydra._on_task_done",
+            "hydra.kernel.execs hydra.kernel.reps hydra.kernel.seconds",
+            "A kernel-payload task completed real Pallas work (keyed by kernel).",
+        ),
         # -- chaos (chaos.py) ----------------------------------------------
         _spec(
             "chaos.inject",
@@ -710,6 +725,18 @@ def _r_ckpt_resume(v: MetricsView, a: Dict[str, Any]) -> None:
     v._bump("hydra.ckpt.preempted_work_s", a["done_s"])
 
 
+def _r_kernel_tune(v: MetricsView, a: Dict[str, Any]) -> None:
+    v._bump("hydra.kernel.tunes")
+    v._bump("hydra.kernel.swept_configs", a["swept"])
+
+
+def _r_kernel_exec(v: MetricsView, a: Dict[str, Any]) -> None:
+    v._bump("hydra.kernel.execs")
+    v._bump_keyed("hydra.kernel.execs", a["kernel"])
+    v._bump("hydra.kernel.reps", a["reps"])
+    v._bump("hydra.kernel.seconds", a["kernel_s"])
+
+
 def _r_chaos_inject(v: MetricsView, a: Dict[str, Any]) -> None:
     v._bump_keyed("hydra.chaos.injected", a["kind"])
 
@@ -757,6 +784,8 @@ _REDUCERS: Dict[str, Callable[[MetricsView, Dict[str, Any]], None]] = {
     "market.spend": _r_market_spend,
     "ckpt.save": _r_ckpt_save,
     "ckpt.resume": _r_ckpt_resume,
+    "kernel.tune": _r_kernel_tune,
+    "kernel.exec": _r_kernel_exec,
     "chaos.inject": _r_chaos_inject,
 }
 

@@ -127,6 +127,75 @@ class ComputeRuntime:
 COMPUTE_RUNTIME = ComputeRuntime()
 
 
+class KernelRuntime:
+    """Executes ``kernel`` tasks: real Pallas work on the wire.
+
+    ``task.payload`` is a plain dict::
+
+        {"kernel": "rglru_scan",            # kernels/registry.py name
+         "shape": {"B": 1, "L": 64, ...},   # omitted -> the kernel's tiny shape
+         "dtype": "float32", "reps": 3, "seed": 0,
+         "config": {"block_d": 512}}        # optional explicit blocks
+
+    Block-config resolution mirrors kernels/ops.py: explicit payload config
+    > autotuned cache (``HYDRA_AUTOTUNE=1`` only) > the kernel's committed
+    defaults.  Execution is rep-granular and resumable: ``progress_frac``
+    advances after every completed repetition, so a preempt-killed task that
+    the checkpointer resumes (ckpt/checkpoint.py) skips the reps it already
+    finished — only the partial rep in flight is re-executed.
+    """
+
+    def run(self, task: Task) -> Any:
+        import time as _time
+
+        import jax
+
+        from repro.kernels import registry as kreg
+        from repro.kernels.autotune import tuned_config
+
+        spec = dict(task.payload or {})
+        kdef = kreg.get_kernel(spec["kernel"])
+        shape = dict(spec.get("shape") or kdef.tiny_shape)
+        dtype = spec.get("dtype", "float32")
+        reps = max(1, int(spec.get("reps", 1)))
+        seed = int(spec.get("seed", 0))
+        config = spec.get("config") or tuned_config(kdef.name, shape, dtype) or kdef.defaults(shape)
+        interpret = kreg.interpret_default()
+        args = kdef.make_args(shape, dtype, seed)
+        done = min(reps, int(round(task.progress_frac * reps)))
+        out = None
+        t0 = _time.perf_counter()
+        for r in range(done, reps):
+            out = kdef.call(shape, args, config, interpret)
+            jax.block_until_ready(out)
+            # completed-rep boundary: durable progress the checkpointer can
+            # capture without losing more than the rep in flight
+            task.kernel_done_s += _time.perf_counter() - t0
+            t0 = _time.perf_counter()
+            task.progress_frac = (r + 1) / reps
+        kernel_s = task.kernel_done_s
+        # lifetime totals (reps survive preempt/resume cycles): the broker
+        # emits ONE kernel.exec per completed task, so execs reconcile with
+        # completed-task counts and reps/seconds with total work performed
+        task.kernel_stats = {
+            "kernel": kdef.name,
+            "reps": reps,
+            "kernel_s": kernel_s,
+            "config": kreg.config_sig(config),
+        }
+        return {
+            "kernel": kdef.name,
+            "sig": kreg.shape_sig(shape, dtype),
+            "config": kreg.config_sig(config),
+            "reps": reps,
+            "skipped_reps": done,
+            "kernel_s": kernel_s,
+        }
+
+
+KERNEL_RUNTIME = KernelRuntime()
+
+
 class CaaSManager:
     """One per cloud-like provider.  Bulk pod submission + tracing."""
 
@@ -267,4 +336,6 @@ class CaaSManager:
             return task.fn() if task.fn else None
         if task.kind == "compute":
             return COMPUTE_RUNTIME.run(task)
+        if task.kind == "kernel":
+            return KERNEL_RUNTIME.run(task)
         raise ValueError(task.kind)

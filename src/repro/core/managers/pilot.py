@@ -11,7 +11,7 @@ import queue
 import threading
 from typing import Callable, Optional
 
-from repro.core.managers.compute import COMPUTE_RUNTIME, ProviderDown
+from repro.core.managers.compute import COMPUTE_RUNTIME, KERNEL_RUNTIME, ProviderDown
 from repro.core.pod import Pod
 from repro.core.provider import ProviderHandle
 from repro.core.task import Task, TaskState
@@ -138,6 +138,8 @@ class PilotManager:
                 result = task.fn() if task.fn else None
             elif task.kind == "compute":
                 result = COMPUTE_RUNTIME.run(task)
+            elif task.kind == "kernel":
+                result = KERNEL_RUNTIME.run(task)
             else:
                 raise ValueError(task.kind)
         except BaseException as e:

@@ -10,6 +10,10 @@ timestamped events.  Kinds:
   compute   - a JAX workload: (arch, shape, step kind) executed via a
               compiled artifact (the "container" task type on TPU pools)
   sleep     - fixed-duration task (paper Exp 3B heterogeneous workloads)
+  kernel    - real Pallas work: ``payload`` names a registered kernel plus
+              problem shape/dtype/reps, resolved against kernels/registry.py
+              and executed rep-by-rep (progress_frac advances per completed
+              rep, so checkpoint/resume skips finished reps)
 """
 from __future__ import annotations
 
@@ -89,7 +93,7 @@ class Task(Future):
         slo_class: str = "batch",
     ):
         super().__init__()
-        assert kind in ("noop", "callable", "compute", "sleep"), kind
+        assert kind in ("noop", "callable", "compute", "sleep", "kernel"), kind
         assert slo_class in SLO_CLASSES, slo_class
         self.uid = _ids.next()
         self.kind = kind
@@ -149,6 +153,13 @@ class Task(Future):
         self.progress_frac: float = 0.0
         self.ckpt_dataset: Optional[str] = None
         self.resumes: int = 0
+        # kind="kernel" bookkeeping (managers/compute.py KernelRuntime):
+        # ``kernel_done_s`` accumulates wall seconds of *completed* reps
+        # (the durable-progress clock the checkpointer reads on preempt);
+        # ``kernel_stats`` is the last execution's summary the broker folds
+        # into the ``kernel.exec`` event on successful completion.
+        self.kernel_done_s: float = 0.0
+        self.kernel_stats: Optional[dict] = None
         self.trace = Trace()
         self._state_lock = threading.RLock()
         self._tstate = TaskState.NEW

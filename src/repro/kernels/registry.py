@@ -1,0 +1,429 @@
+"""Kernel registry: one shared description of every Pallas kernel.
+
+Each :class:`KernelDef` bundles what the rest of the system needs to treat a
+kernel as brokered work rather than a hand-called function:
+
+  make_args     seeded, deterministic problem-instance builder (same seed +
+                same shape => bit-identical operands on every host)
+  call / ref    the Pallas path (explicit block config + interpret flag) and
+                the pure-jnp oracle from kernels/ref.py
+  space         the exhaustive block/tile sweep space for a problem shape
+  cost          the roofline cost model for one (shape, config) point:
+                FLOPs, modeled HBM traffic, VMEM tile footprint, grid cells
+
+The cost model mirrors the BlockSpec tiling exactly: traffic counts one tile
+fetch per *launched* grid cell (Pallas copies blocks for masked-out cells
+too), while FLOPs count only *live* cells (``pl.when`` skips the math), so
+larger attention blocks trade extra masked FLOPs for fewer cell launches and
+less re-fetched K/V — the three-way frontier the autotuner prunes on
+(kernels/autotune.py).
+
+Consumers: the autotuner, the ``kind="kernel"`` task runtime
+(core/managers/compute.py), benchmarks/kernels_bench.py, and the parity
+tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import ref as _ref
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import selective_scan as _ss
+
+# power-of-two block candidates; a config is admissible only if every block
+# divides its dimension (after the kernels' own min(block, dim) clamp)
+_BLOCK_CANDIDATES = (32, 64, 128, 256, 512, 1024)
+
+
+@dataclass(frozen=True)
+class Cost:
+    """Roofline cost of one (shape, config) point."""
+
+    flops: float
+    hbm_bytes: float
+    vmem_bytes: float
+    grid_cells: int
+
+    @property
+    def intensity(self) -> float:
+        """Arithmetic intensity (FLOPs per modeled HBM byte)."""
+        return self.flops / self.hbm_bytes if self.hbm_bytes else 0.0
+
+
+@dataclass(frozen=True)
+class KernelDef:
+    name: str
+    params: tuple  # config keys, canonical order
+    defaults: Callable[[dict], dict]
+    make_args: Callable[[dict, str, int], tuple]
+    call: Callable[[dict, tuple, dict, bool], Any]
+    ref: Callable[[dict, tuple], Any]
+    space: Callable[[dict], list]
+    cost: Callable[[dict, dict, str], Cost]
+    tiny_shape: dict  # default payload shape for kind="kernel" tasks
+    smoke_shape: dict  # CI bench shape (BENCH_smoke.json rows)
+    full_shape: dict  # nightly sweep shape
+
+
+def _isz(dtype: str) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _divisors(dim: int, candidates=_BLOCK_CANDIDATES) -> list:
+    out = [c for c in candidates if c <= dim and dim % c == 0]
+    return out or [dim]
+
+
+def shape_sig(shape: dict, dtype: str) -> str:
+    """Canonical shape signature used in tune-cache keys: sorted ``k=v``
+    pairs + dtype, no spaces (dataset names must be stable strings)."""
+    parts = [f"{k}={shape[k]}".lower() for k in sorted(shape)]
+    parts.append(f"dtype={dtype}")
+    return ",".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+def _fa_blocks(shape: dict, config: dict) -> tuple:
+    lq = shape["L"]
+    bq = min(config["block_q"], lq)
+    bk = min(config["block_k"], lq)
+    return bq, bk, lq // bq, lq // bk
+
+
+def _fa_live_cells(shape: dict, config: dict) -> int:
+    bq, bk, nq, nk = _fa_blocks(shape, config)
+    window = shape.get("window")
+    live = 0
+    for qi in range(nq):
+        for ki in range(nk):
+            ok = True
+            if shape.get("causal", True):
+                ok = ki * bk <= qi * bq + bq - 1
+            if window is not None:
+                ok = ok and (qi * bq - (ki * bk + bk - 1) < window)
+            live += ok
+    return live
+
+
+def _fa_defaults(shape: dict) -> dict:
+    return {"block_q": _fa.DEFAULT_BLOCK_Q, "block_k": _fa.DEFAULT_BLOCK_K}
+
+
+def _fa_make_args(shape: dict, dtype: str, seed: int) -> tuple:
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, H, KV, L, hd = shape["B"], shape["H"], shape["KV"], shape["L"], shape["hd"]
+    q = jax.random.normal(kq, (B, H, L, hd), jnp.dtype(dtype))
+    k = jax.random.normal(kk, (B, KV, L, hd), jnp.dtype(dtype))
+    v = jax.random.normal(kv, (B, KV, L, hd), jnp.dtype(dtype))
+    return q, k, v
+
+
+def _fa_call(shape: dict, args: tuple, config: dict, interpret: bool):
+    q, k, v = args
+    return _fa.flash_attention(
+        q, k, v,
+        causal=shape.get("causal", True), window=shape.get("window"),
+        block_q=config["block_q"], block_k=config["block_k"],
+        interpret=interpret,
+    )
+
+
+def _fa_ref(shape: dict, args: tuple):
+    q, k, v = args
+    return _ref.attention_ref(
+        q, k, v, causal=shape.get("causal", True), window=shape.get("window")
+    )
+
+
+def _fa_space(shape: dict) -> list:
+    divs = _divisors(shape["L"], candidates=(32, 64, 128, 256, 512))
+    return [{"block_q": bq, "block_k": bk} for bq in divs for bk in divs]
+
+
+def _fa_cost(shape: dict, config: dict, dtype: str) -> Cost:
+    B, H, hd = shape["B"], shape["H"], shape["hd"]
+    isz = _isz(dtype)
+    bq, bk, nq, nk = _fa_blocks(shape, config)
+    live = _fa_live_cells(shape, config)
+    cells = B * H * nq * nk
+    # two MXU matmuls (q@k^T and p@v) per LIVE cell; masked cells skip math
+    flops = 4.0 * B * H * live * bq * bk * hd
+    # tile traffic per LAUNCHED cell (block copies happen even when masked):
+    # q tile + k tile + v tile in, plus the output written once per q row
+    hbm = isz * B * H * (nq * nk * (bq + 2 * bk) * hd + shape["L"] * hd)
+    # q/k/v input tiles + fp32 scratch (m, l, acc) + output tile
+    vmem = isz * (bq + 2 * bk) * hd + 4 * bq * (2 + hd) + isz * bq * hd
+    return Cost(flops, float(hbm), float(vmem), cells)
+
+
+# ---------------------------------------------------------------------------
+# selective_scan
+# ---------------------------------------------------------------------------
+
+
+def _ss_defaults(shape: dict) -> dict:
+    return {"block_d": _ss.DEFAULT_BLOCK_D}
+
+
+def _ss_make_args(shape: dict, dtype: str, seed: int) -> tuple:
+    kx, kdt, kb, kc, ka = jax.random.split(jax.random.PRNGKey(seed), 5)
+    B, ck, di, N = shape["B"], shape["chunk"], shape["di"], shape["N"]
+    x = jax.random.normal(kx, (B, ck, di), jnp.dtype(dtype))
+    dt = jax.random.uniform(kdt, (B, ck, di), jnp.float32, 0.001, 0.1)
+    b = jax.random.normal(kb, (B, ck, N), jnp.float32)
+    c = jax.random.normal(kc, (B, ck, N), jnp.float32)
+    a = -jax.random.uniform(ka, (di, N), jnp.float32, 0.5, 2.0)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    return x, dt, b, c, a, h0
+
+
+def _ss_call(shape: dict, args: tuple, config: dict, interpret: bool):
+    return _ss.selective_scan_chunk(
+        *args, block_d=config["block_d"], interpret=interpret
+    )
+
+
+def _ss_ref(shape: dict, args: tuple):
+    return _ref.selective_scan_chunk_ref(*args)
+
+
+def _ss_space(shape: dict) -> list:
+    return [{"block_d": bd} for bd in _divisors(shape["di"])]
+
+
+def _ss_cost(shape: dict, config: dict, dtype: str) -> Cost:
+    B, ck, di, N = shape["B"], shape["chunk"], shape["di"], shape["N"]
+    isz = _isz(dtype)
+    bd = min(config["block_d"], di)
+    nd = di // bd
+    cells = B * nd
+    # per timestep per channel: exp-discretize + state update + y reduction
+    flops = 6.0 * B * ck * di * N
+    # per cell: x/dt in, B/C in (re-fetched per d-block: the config lever),
+    # a + h0 in, y + h out
+    per_cell = (
+        isz * ck * bd + 4 * ck * bd  # x (dtype) + dt (f32)
+        + 4 * (2 * ck * N + 2 * bd * N)  # b, c, a, h0
+        + 4 * (ck * bd + bd * N)  # y, h_last
+    )
+    vmem = isz * ck * bd + 4 * (2 * ck * bd + 2 * ck * N + 3 * bd * N)
+    return Cost(flops, float(cells * per_cell), float(vmem), cells)
+
+
+# ---------------------------------------------------------------------------
+# rglru_scan
+# ---------------------------------------------------------------------------
+
+
+def _rg_defaults(shape: dict) -> dict:
+    return {"block_d": _rg.DEFAULT_BLOCK_D}
+
+
+def _rg_make_args(shape: dict, dtype: str, seed: int) -> tuple:
+    ka, kg = jax.random.split(jax.random.PRNGKey(seed), 2)
+    B, L, dr = shape["B"], shape["L"], shape["dr"]
+    log_a = -jax.random.uniform(ka, (B, L, dr), jnp.float32, 0.01, 1.0)
+    gx = jax.random.normal(kg, (B, L, dr), jnp.float32)
+    h0 = jnp.zeros((B, dr), jnp.float32)
+    return log_a, gx, h0
+
+
+def _rg_call(shape: dict, args: tuple, config: dict, interpret: bool):
+    return _rg.rglru_scan(*args, block_d=config["block_d"], interpret=interpret)
+
+
+def _rg_ref(shape: dict, args: tuple):
+    return _ref.rglru_ref(*args)
+
+
+def _rg_space(shape: dict) -> list:
+    return [{"block_d": bd} for bd in _divisors(shape["dr"])]
+
+
+def _rg_cost(shape: dict, config: dict, dtype: str) -> Cost:
+    B, L, dr = shape["B"], shape["L"], shape["dr"]
+    bd = min(config["block_d"], dr)
+    cells = B * (dr // bd)
+    # exp + multiply-add per (t, channel); traffic is config-independent
+    # (log_a/gx/y each touched once, h tiles sum to B*dr regardless of bd),
+    # so the frontier collapses to minimum grid cells: the pruner keeps only
+    # the largest admissible block
+    flops = 3.0 * B * L * dr
+    hbm = 4.0 * (3 * B * L * dr + 2 * B * dr)
+    vmem = 4.0 * (3 * L * bd + 2 * bd)
+    return Cost(flops, hbm, vmem, cells)
+
+
+# ---------------------------------------------------------------------------
+# moe_gmm
+# ---------------------------------------------------------------------------
+
+
+def _gmm_defaults(shape: dict) -> dict:
+    return {
+        "block_c": _gmm.DEFAULT_BLOCK_C,
+        "block_f": _gmm.DEFAULT_BLOCK_F,
+        "block_d": _gmm.DEFAULT_BLOCK_D,
+    }
+
+
+def _gmm_make_args(shape: dict, dtype: str, seed: int) -> tuple:
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed), 2)
+    E, C, D, F = shape["E"], shape["C"], shape["D"], shape["F"]
+    scale = 1.0 / (D**0.5)
+    x = jax.random.normal(kx, (E, C, D), jnp.dtype(dtype))
+    w = (jax.random.normal(kw, (E, D, F), jnp.float32) * scale).astype(jnp.dtype(dtype))
+    return x, w
+
+
+def _gmm_call(shape: dict, args: tuple, config: dict, interpret: bool):
+    x, w = args
+    return _gmm.moe_gmm(
+        x, w,
+        block_c=config["block_c"], block_f=config["block_f"],
+        block_d=config["block_d"], interpret=interpret,
+    )
+
+
+def _gmm_ref(shape: dict, args: tuple):
+    return _ref.moe_gmm_ref(*args)
+
+
+def _gmm_space(shape: dict) -> list:
+    return [
+        {"block_c": bc, "block_f": bf, "block_d": bd}
+        for bc in _divisors(shape["C"], candidates=(32, 64, 128, 256))
+        for bf in _divisors(shape["F"], candidates=(64, 128, 256, 512))
+        for bd in _divisors(shape["D"], candidates=(128, 256, 512))
+    ]
+
+
+def _gmm_cost(shape: dict, config: dict, dtype: str) -> Cost:
+    E, C, D, F = shape["E"], shape["C"], shape["D"], shape["F"]
+    isz = _isz(dtype)
+    bc = min(config["block_c"], C)
+    bf = min(config["block_f"], F)
+    bd = min(config["block_d"], D)
+    nc, nf, nd = C // bc, F // bf, D // bd
+    cells = E * nc * nf * nd
+    flops = 2.0 * E * C * D * F
+    # x tiles re-fetched per f-block, w tiles per c-block, y written per
+    # d-block (interpret copies the out tile back every cell)
+    hbm = isz * (nf * E * C * D + nc * E * D * F + nd * E * C * F)
+    vmem = isz * (bc * bd + bd * bf + bc * bf) + 4 * bc * bf
+    return Cost(flops, float(hbm), float(vmem), cells)
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+KERNELS: dict = {
+    k.name: k
+    for k in (
+        KernelDef(
+            name="flash_attention",
+            params=("block_q", "block_k"),
+            defaults=_fa_defaults,
+            make_args=_fa_make_args,
+            call=_fa_call,
+            ref=_fa_ref,
+            space=_fa_space,
+            cost=_fa_cost,
+            tiny_shape={"B": 1, "H": 2, "KV": 1, "L": 128, "hd": 32, "causal": True, "window": None},
+            smoke_shape={"B": 1, "H": 4, "KV": 2, "L": 256, "hd": 64, "causal": True, "window": None},
+            full_shape={"B": 1, "H": 8, "KV": 2, "L": 512, "hd": 64, "causal": True, "window": None},
+        ),
+        KernelDef(
+            name="selective_scan",
+            params=("block_d",),
+            defaults=_ss_defaults,
+            make_args=_ss_make_args,
+            call=_ss_call,
+            ref=_ss_ref,
+            space=_ss_space,
+            cost=_ss_cost,
+            tiny_shape={"B": 1, "chunk": 32, "di": 128, "N": 8},
+            smoke_shape={"B": 2, "chunk": 64, "di": 256, "N": 16},
+            full_shape={"B": 2, "chunk": 128, "di": 1024, "N": 16},
+        ),
+        KernelDef(
+            name="rglru_scan",
+            params=("block_d",),
+            defaults=_rg_defaults,
+            make_args=_rg_make_args,
+            call=_rg_call,
+            ref=_rg_ref,
+            space=_rg_space,
+            cost=_rg_cost,
+            tiny_shape={"B": 1, "L": 64, "dr": 128},
+            smoke_shape={"B": 2, "L": 128, "dr": 512},
+            full_shape={"B": 2, "L": 256, "dr": 1024},
+        ),
+        KernelDef(
+            name="moe_gmm",
+            params=("block_c", "block_f", "block_d"),
+            defaults=_gmm_defaults,
+            make_args=_gmm_make_args,
+            call=_gmm_call,
+            ref=_gmm_ref,
+            space=_gmm_space,
+            cost=_gmm_cost,
+            tiny_shape={"E": 2, "C": 64, "D": 128, "F": 128},
+            smoke_shape={"E": 4, "C": 128, "D": 256, "F": 512},
+            full_shape={"E": 8, "C": 256, "D": 512, "F": 512},
+        ),
+    )
+}
+
+
+def get_kernel(name: str) -> KernelDef:
+    kdef = KERNELS.get(name)
+    if kdef is None:
+        raise KeyError(
+            f"unknown kernel {name!r}; registered: {sorted(KERNELS)}"
+        )
+    return kdef
+
+
+def config_sig(config: dict) -> str:
+    """Canonical ``k=v`` string of a block config (event attrs, payloads)."""
+    return ",".join(f"{k}={config[k]}" for k in sorted(config))
+
+
+def interpret_default() -> bool:
+    """Interpret mode everywhere but a real TPU backend (same rule as
+    kernels/ops.py)."""
+    return jax.default_backend() != "tpu"
+
+
+def max_abs_err(a, b) -> float:
+    """Max elementwise |a - b| across a pytree pair (parity gate metric)."""
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(leaves_a, leaves_b)
+    )
+
+
+__all__ = [
+    "Cost",
+    "KernelDef",
+    "KERNELS",
+    "get_kernel",
+    "shape_sig",
+    "config_sig",
+    "interpret_default",
+    "max_abs_err",
+]

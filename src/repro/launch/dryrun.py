@@ -269,6 +269,37 @@ def run_cell(
     return record
 
 
+def kernel_report(save: bool = True, verbose: bool = True) -> list[dict]:
+    """Roofline-predicted Pallas kernel configs (kernels/autotune.py
+    ``predict_best``): for every registered kernel at its smoke and full
+    bench shapes, the config the pruned model sweep picks, its predicted
+    arithmetic intensity, and the sweep accounting.  Pure model — no
+    execution, no compilation — so the rows sit next to the HLO-derived
+    roofline cells and predicted-vs-measured drift is visible in one place
+    (benchmarks/roofline_report.py reads the saved artifact)."""
+    from repro.kernels import registry as kreg
+    from repro.kernels.autotune import predict_best
+
+    rows = []
+    for name, kdef in kreg.KERNELS.items():
+        for tier in ("smoke", "full"):
+            shape = dict(getattr(kdef, f"{tier}_shape"))
+            rows.append({"tier": tier, **predict_best(name, shape)})
+            if verbose:
+                r = rows[-1]
+                print(
+                    f"  {name:18s} {tier:5s} config={r['config']:28s} "
+                    f"intensity={r['intensity_flops_per_byte']:9.3f} "
+                    f"swept {r['swept']}/{r['exhaustive']}"
+                )
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        path = os.path.join(ARTIFACT_DIR, "kernels__predicted.json")
+        with open(path, "w") as f:
+            json.dump({"kind": "kernel_predictions", "rows": rows}, f, indent=2)
+    return rows
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -298,6 +329,8 @@ def main() -> int:
             except Exception as e:
                 failures.append((a, s, mp, repr(e)))
                 traceback.print_exc()
+    print("\n== Pallas kernel predicted configs (roofline model, no execution) ==")
+    kernel_report()
     if failures:
         print(f"\n{len(failures)} FAILURES:")
         for f in failures:

@@ -97,6 +97,28 @@ def searise_smoke(seed: int = 0) -> ScenarioSpec:
     )
 
 
+def searise_kernels(seed: int = 0) -> ScenarioSpec:
+    """searise_smoke with REAL compute on the wire: the serve lane carries
+    ``kind="kernel"`` payloads cycling through all four Pallas kernels at
+    their tiny shapes, the broker pre-tunes them with the modeled-timer
+    autotuner, and task checkpoints are armed so a preempt-killed kernel
+    task resumes from its completed-rep boundary.  Same correlated fault
+    schedule as the smoke preset — the acceptance run for "a scenario with
+    kernel-payload tasks completes with zero failed tasks under chaos"."""
+    spec = searise_smoke(seed)
+    spec.name = "searise-kernels"
+    spec.traffic.serve_kernels = (
+        "flash_attention",
+        "selective_scan",
+        "rglru_scan",
+        "moe_gmm",
+    )
+    spec.traffic.serve_kernel_reps = 2
+    spec.kernel_autotune = True
+    spec.checkpoint_interval_s = 2.0
+    return spec
+
+
 def searise_at_scale(seed: int = 0) -> ScenarioSpec:
     """The ISSUE's acceptance scenario: 1024 FACTS members + train/serve
     traffic, four correlated fault events including a whole-site outage and

@@ -67,6 +67,7 @@ class ScenarioReport:
     staging: dict = field(default_factory=dict)
     stream: dict = field(default_factory=dict)
     scale: dict = field(default_factory=dict)
+    kernel: dict = field(default_factory=dict)  # kernel.tune/exec rollup
     chaos_stats: dict = field(default_factory=dict)
     ledger_error: Optional[str] = None
     events_error: Optional[str] = None  # strict event-view divergence
@@ -96,6 +97,7 @@ class ScenarioReport:
             "staging": self.staging,
             "stream": self.stream,
             "scale": self.scale,
+            "kernel": self.kernel,
             "chaos_stats": self.chaos_stats,
             "ledger_error": self.ledger_error,
             "events_error": self.events_error,
@@ -146,6 +148,10 @@ def build_broker(spec: ScenarioSpec) -> Hydra:
         h.register_provider(p.to_core())
     if spec.checkpoint_interval_s is not None:
         h.enable_task_checkpoints(interval_s=spec.checkpoint_interval_s)
+    if spec.kernel_autotune:
+        # modeled timer: scenario determinism must not hinge on wall-clock
+        # sweeps, and the roofline pick is what the dry-run report predicts
+        h.enable_kernel_autotune(timer="model", seed=spec.seed)
     if spec.elastic:
         pool = ProviderPool([e.to_core() for e in spec.elastic], seed=spec.seed)
         planner = None
@@ -172,6 +178,14 @@ def run_scenario(
     report = ScenarioReport(name=spec.name, seed=spec.seed, chaos_enabled=chaos)
     with virtual_time() as clock:
         h = build_broker(spec)
+        if h.autotuner is not None and spec.traffic.serve_kernels:
+            # pre-tune the serve lane's kernels at their payload shapes:
+            # winners land as pinned ``tune:`` datasets in this registry
+            # and one kernel.tune event each on this broker's bus
+            from repro.kernels.registry import get_kernel
+
+            for kname in spec.traffic.serve_kernels:
+                h.autotuner.tune(kname, get_kernel(kname).tiny_shape, "float32")
         wfs = build_traffic(h.staging.registry, spec.traffic, prefix=spec.name)
         tasks = [t for wf in wfs for t in wf.tasks]
         report.n_workflows = len(wfs)
@@ -230,6 +244,13 @@ def run_scenario(
         scale = h.scale_stats()
         scale.pop("pending_acquisitions", None)  # not JSON-stable
         report.scale = scale
+        report.kernel = {
+            "execs": h.kernel_execs,
+            "execs_by": dict(h.kernel_execs_by),
+            "reps": h.kernel_reps,
+            "seconds": round(h.kernel_seconds, 6),
+            "tunes": h.autotuner.tunes if h.autotuner is not None else 0,
+        }
         report.n_bus_events = len(h.events)
         if record_events is not None:
             h.events.dump_jsonl(record_events)

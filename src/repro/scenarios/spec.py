@@ -121,6 +121,11 @@ class TrafficSpec:
     serve_waves: int = 0
     serve_tasks_per_wave: int = 8
     serve_task_s: float = 0.5
+    # real compute on the wire: a non-empty tuple switches the serve lane
+    # from modeled sleeps to ``kind="kernel"`` payloads cycling through
+    # these kernels/registry.py names (tiny shapes, so waves stay cheap)
+    serve_kernels: tuple = ()
+    serve_kernel_reps: int = 1
 
 
 @dataclass
@@ -183,6 +188,10 @@ class ScenarioSpec:
     # tasks resume from progress_frac instead of restarting
     market_slo_s: Optional[float] = None
     checkpoint_interval_s: Optional[float] = None
+    # Pallas autotuner (kernels/autotune.py): attach a modeled-timer tuner
+    # to the broker so serve-lane kernels are pre-tuned at run start —
+    # winners land as pinned datasets and kernel.tune events on the bus
+    kernel_autotune: bool = False
     # invariant bounds
     max_makespan_inflation: float = 1.5
     timeout_s: float = 3600.0
@@ -205,6 +214,8 @@ class ScenarioSpec:
             traffic = dict(traffic)
             if "facts_durations" in traffic:
                 traffic["facts_durations"] = tuple(traffic["facts_durations"])
+            if "serve_kernels" in traffic:
+                traffic["serve_kernels"] = tuple(traffic["serve_kernels"])
             d["traffic"] = TrafficSpec(**traffic)
         d["chaos"] = [
             c if isinstance(c, ChaosDecl) else ChaosDecl(**c)

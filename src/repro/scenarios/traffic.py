@@ -135,8 +135,17 @@ def serve_traffic(
     tasks_per_wave: int = 8,
     task_s: float = 0.5,
     prefix: str = "searise",
+    kernels: tuple = (),
+    kernel_reps: int = 1,
 ) -> list[Workflow]:
-    """Waves of short independent requests against one pinned snapshot."""
+    """Waves of short independent requests against one pinned snapshot.
+
+    With ``kernels`` non-empty the wave tasks carry REAL compute: each is a
+    ``kind="kernel"`` payload (managers/compute.py KernelRuntime) cycling
+    through the named kernels at their registry tiny shapes — the paper's
+    heterogeneous-workload claim exercised with actual Pallas calls instead
+    of modeled sleeps.  The snapshot input still gates placement, so kernel
+    requests obey data gravity exactly like the sleep-shaped ones."""
     snapshot = f"{prefix}/serve/model-snapshot"
     registry.add(snapshot, SERVE_SNAPSHOT_MB, sites=["shared"], pinned=True)
     # the latency-sensitive tenant: interactive requests preempt queued
@@ -144,18 +153,35 @@ def serve_traffic(
     lane = dict(tenant="serve", slo_class="interactive")
     res = Resources(cpus=1, memory_mb=1024)
     wfs = []
+    i = 0
     for w in range(n_waves):
         wf = Workflow(f"{prefix}.serve.{w:03d}")
         for _ in range(tasks_per_wave):
-            wf.add(
-                Task(
-                    "sleep",
-                    duration=task_s,
-                    resources=res,
-                    inputs=[snapshot],
-                    **lane,
+            if kernels:
+                wf.add(
+                    Task(
+                        "kernel",
+                        payload={
+                            "kernel": kernels[i % len(kernels)],
+                            "reps": kernel_reps,
+                            "seed": i,
+                        },
+                        resources=res,
+                        inputs=[snapshot],
+                        **lane,
+                    )
                 )
-            )
+                i += 1
+            else:
+                wf.add(
+                    Task(
+                        "sleep",
+                        duration=task_s,
+                        resources=res,
+                        inputs=[snapshot],
+                        **lane,
+                    )
+                )
         wfs.append(wf)
     return wfs
 
@@ -184,6 +210,8 @@ def build_traffic(registry, traffic, prefix: str = "searise") -> list[Workflow]:
             traffic.serve_waves,
             tasks_per_wave=traffic.serve_tasks_per_wave,
             task_s=traffic.serve_task_s,
+            kernels=tuple(traffic.serve_kernels),
+            kernel_reps=traffic.serve_kernel_reps,
             prefix=prefix,
         )
     return wfs
